@@ -1,0 +1,173 @@
+"""§Perf hillclimbing: three chosen cells, hypothesis -> change -> re-lower
+-> measure.  Results land in experiments/perf/ and EXPERIMENTS.md §Perf.
+
+Cells (from the baseline roofline table):
+  A. smollm-360m  x prefill_32k — worst useful fraction (0.18): the baseline
+     chunked-causal attention computes the FULL masked S^2 (2x waste).
+     Change: balanced causal schedule (complementary q-block pairs).
+  B. xlstm-1.3b   x long_500k  — the only collective-bound cell: the mLSTM
+     matrix state is fully replicated (H=4 < 16 unshardable), so decode
+     pays resharding collectives.  Change: shard the state's key dim (1024)
+     over `model`.
+  C. deepseek-7b  x train_4k   — the paper-representative HiFT step.
+     Changes: (i) balanced attention; (ii) selective remat off (memory
+     headroom exists at bf16 params + flash remat + chunked CE).
+"""
+from __future__ import annotations
+
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import dataclasses
+import json
+from pathlib import Path
+
+PEAK, HBM, ICI = 197e12, 819e9, 50e9
+OUT = Path(__file__).resolve().parents[1] / "experiments" / "perf"
+
+
+def measure(cfg, shape_name, kind_override=None):
+    import jax
+    from repro.configs.base import SHAPES
+    from repro.launch import costmodel
+    from repro.launch.dryrun import (collective_bytes_total, lower_serve_cell,
+                                     lower_train_cell, parse_collectives)
+    from repro.launch.mesh import make_production_mesh
+
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh()
+    n = mesh.devices.size
+    if shape.kind == "train":
+        lowered, meta = lower_train_cell(cfg, shape, mesh)
+        cost = costmodel.train_cost(cfg, shape, cut=meta.get("cut") or 0,
+                                    active_layers=1)
+    else:
+        lowered, meta = lower_serve_cell(cfg, shape, mesh)
+        cost = costmodel.serve_cost(cfg, shape, shape.kind)
+    comp = lowered.compile()
+    ma = comp.memory_analysis()
+    coll, detail = collective_bytes_total(parse_collectives(comp.as_text()),
+                                          cfg.n_layers)
+    per_dev = (ma.argument_size_in_bytes + ma.temp_size_in_bytes
+               + ma.output_size_in_bytes - ma.alias_size_in_bytes)
+    return {
+        "compute_s": cost.flops / (n * PEAK),
+        "memory_s": cost.hbm_bytes / (n * HBM),
+        "collective_s": coll / (n * ICI),
+        "collective_bytes": coll,
+        "flops": cost.flops,
+        "model_flops": cost.model_flops,
+        "mem_gb_per_dev": per_dev / 2**30,
+        "fits": bool(per_dev < 16 * 2**30),
+    }
+
+
+def log_iteration(cell, name, hypothesis, before, after, notes=""):
+    dom_b = max(("compute_s", "memory_s", "collective_s"), key=before.get)
+    dom_a = max(("compute_s", "memory_s", "collective_s"), key=after.get)
+    delta = (before[dom_b] - after[dom_b]) / before[dom_b]
+    rec = {"cell": cell, "change": name, "hypothesis": hypothesis,
+           "before": before, "after": after,
+           "dominant_before": dom_b, "dominant_after": dom_a,
+           "delta_on_dominant": delta,
+           "confirmed": delta > 0.05, "notes": notes}
+    OUT.mkdir(parents=True, exist_ok=True)
+    (OUT / f"{cell.replace('/', '_')}__{name}.json").write_text(
+        json.dumps(rec, indent=1))
+    print(f"[{cell}] {name}: {dom_b} {before[dom_b]:.3e} -> {after[dom_b]:.3e} "
+          f"({delta*+100:+.1f}%) {'CONFIRMED' if rec['confirmed'] else 'refuted'}")
+    return rec
+
+
+def climb_A():
+    from repro.configs.registry import get_config
+    cfg0 = get_config("smollm_360m")
+    base = measure(cfg0, "prefill_32k")
+    cfg1 = dataclasses.replace(cfg0, attention_balanced=True)
+    after = measure(cfg1, "prefill_32k")
+    return log_iteration(
+        "smollm-360m/prefill_32k", "balanced_causal_attention",
+        "baseline masked-full attention executes 2x the useful causal flops; "
+        "pairing q blocks (i, n-1-i) gives each pair exactly n+1 kv blocks -> "
+        "attention flops ~halve; prefill is attention-dominated at 32k so "
+        "predicted compute term -40..50%",
+        base, after)
+
+
+def climb_B():
+    from repro.configs.registry import get_config
+    from repro.dist import shardings as SH
+    cfg = get_config("xlstm_1_3b")
+    base = measure(cfg, "long_500k")
+
+    # change: shard the mLSTM state's key dim over `model`
+    orig = SH.cache_specs
+
+    def patched(cache, mesh):
+        import numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.common.pytree import flatten_with_paths, unflatten_from_paths
+        specs = flatten_with_paths(orig(cache, mesh))
+        flat = flatten_with_paths(cache)
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        mt = sizes.get("model", 1)
+        out = {}
+        for p, spec in specs.items():
+            leaf = flat[p]
+            if ("mlstm" in p and leaf.ndim >= 4 and spec == P(*([None]*leaf.ndim))
+                    and leaf.shape[-1] % mt == 0 and leaf.shape[-1] >= mt):
+                sp = [None] * leaf.ndim
+                sp[-1] = "model"
+                spec = P(*sp)
+            out[p] = spec
+        return unflatten_from_paths(out)
+
+    SH.cache_specs = patched
+    try:
+        after = measure(cfg, "long_500k")
+    finally:
+        SH.cache_specs = orig
+    return log_iteration(
+        "xlstm-1.3b/long_500k", "shard_mlstm_state_over_model",
+        "the (42,1,4,1025,1024) fp32 matrix memory is replicated (H=4 < 16 "
+        "unshardable), so every decode step reshards activations across all "
+        "16 model shards; sharding the key dim (1024/16) localizes the state "
+        "update and turns the combine into one tiny psum -> collective term "
+        "(dominant) should drop >2x and memory term ~16x on the state",
+        base, after)
+
+
+def climb_C():
+    from repro.configs.registry import get_config
+    cfg0 = get_config("deepseek_7b")
+    base = measure(cfg0, "train_4k")
+
+    cfg1 = dataclasses.replace(cfg0, attention_balanced=True)
+    r1 = measure(cfg1, "train_4k")
+    rec1 = log_iteration(
+        "deepseek-7b/train_4k", "balanced_causal_attention",
+        "attention core is ~25% of layer flops at 4k/d4096; halving its "
+        "masked-full waste should cut the compute term ~10-12%",
+        base, r1)
+
+    cfg2 = dataclasses.replace(cfg0, attention_balanced=True, remat="none")
+    r2 = measure(cfg2, "train_4k")
+    rec2 = log_iteration(
+        "deepseek-7b/train_4k", "balanced+no_remat",
+        "with bf16 params + flash-checkpointed attention + chunked CE the "
+        "cell has HBM headroom (11.9 GB); dropping layer remat removes the "
+        "forward recompute above the cut (~25% of total flops) if it still "
+        "fits in 16 GB",
+        r1, r2)
+    return [rec1, rec2]
+
+
+if __name__ == "__main__":
+    import sys
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("A", "all"):
+        climb_A()
+    if which in ("B", "all"):
+        climb_B()
+    if which in ("C", "all"):
+        climb_C()

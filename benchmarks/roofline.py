@@ -1,0 +1,52 @@
+"""Roofline report (deliverable g): reads experiments/dryrun/*.json written
+by repro.launch.dryrun and prints per-(arch x shape x mesh):
+  compute / memory / collective terms (seconds), dominant bottleneck,
+  MODEL_FLOPS/flops useful fraction, per-device memory fit.
+
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+OUT = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def load_cells():
+    cells = []
+    for f in sorted(OUT.glob("*.json")):
+        cells.append(json.loads(f.read_text()))
+    return cells
+
+
+def run(csv=True, mesh="16x16"):
+    cells = [c for c in load_cells() if c["mesh"] == mesh]
+    rows = []
+    for c in cells:
+        name = f"roofline/{c['arch']}/{c['shape']}"
+        if c["status"] == "skipped":
+            if csv:
+                print(f"{name},0,skipped={c['reason'][:60]}")
+            continue
+        if c["status"] != "ok":
+            if csv:
+                print(f"{name},0,ERROR={c.get('error','?')[:80]}")
+            continue
+        r = c["roofline"]
+        a = c["analytic"]
+        m = c["memory"]
+        frac = a["model_flops"] / max(a["flops"], 1.0)
+        derived = (f"compute_s={r['compute_s']:.3e};memory_s={r['memory_s']:.3e};"
+                   f"collective_s={r['collective_s']:.3e};dom={r['dominant']};"
+                   f"useful={frac:.2f};mem_gb={m['per_device_total_gb']:.2f};"
+                   f"fits={m['fits_16gb_hbm']}")
+        if csv:
+            print(f"{name},{r['bound_step_s']*1e6:.0f},{derived}")
+        rows.append((c["arch"], c["shape"], r, a, m))
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

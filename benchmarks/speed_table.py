@@ -1,0 +1,59 @@
+"""Paper Table 5 analogue: wall-clock step time HiFT vs FPFT per optimizer,
+measured on CPU with a small model (relative ordering is the claim: HiFT's
+per-step compute shrinks because backward is cut below the active group)."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.configs.base import ArchConfig
+from repro.core import FPFTRunner, HiFTConfig, HiFTRunner, LRSchedule
+from repro.models import transformer as T
+from repro.optim import make_optimizer
+
+
+def _cfg():
+    return ArchConfig(name="bench", family="dense", n_layers=8, d_model=256,
+                      n_heads=8, kv_heads=4, d_ff=1024, vocab=2048,
+                      block_q=64, block_k=64, ce_chunk=64)
+
+
+def _batch(cfg, b=8, s=256):
+    k = jax.random.PRNGKey(0)
+    t = jax.random.randint(k, (b, s), 0, cfg.vocab)
+    return {"tokens": t, "labels": t}
+
+
+def _time_steps(runner, batch, n=10, warmup=None):
+    warm = warmup if warmup is not None else getattr(runner, "k", 1)
+    for _ in range(warm):          # compile every per-group step
+        runner.train_step(batch)
+    t0 = time.time()
+    for _ in range(n):
+        runner.train_step(batch)
+    return (time.time() - t0) / n
+
+
+def run(csv=True):
+    cfg = _cfg()
+    params = T.init(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    rows = []
+    for opt in ["adamw", "sgd"]:
+        f = FPFTRunner(cfg, params, make_optimizer(opt), LRSchedule(1e-4))
+        tf = _time_steps(f, batch, warmup=2)
+        h = HiFTRunner(cfg, params, make_optimizer(opt), HiFTConfig(m=1),
+                       LRSchedule(1e-4))
+        th = _time_steps(h, batch, n=h.k)
+        rows.append((opt, tf, th))
+        if csv:
+            print(f"speed_table/fpft/{opt},{tf*1e6:.0f},steps_per_s={1/tf:.2f}")
+            print(f"speed_table/hift/{opt},{th*1e6:.0f},steps_per_s={1/th:.2f};"
+                  f"speedup_vs_fpft={tf/th:.2f}x")
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

@@ -1,0 +1,60 @@
+"""Paper Fig. 4 (left+right): update ORDER (B2U/T2D/RAN) and grouping size m
+have negligible quality impact.  Trains a small LM on a fixed Markov task."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core import HiFTConfig, HiFTRunner, LRSchedule
+from repro.data.synthetic import DataConfig, SyntheticLM
+from repro.models import transformer as T
+from repro.optim import make_optimizer
+
+
+def _cfg():
+    return ArchConfig(name="strat", family="dense", n_layers=4, d_model=128,
+                      n_heads=4, kv_heads=2, d_ff=256, vocab=512,
+                      block_q=32, block_k=32, ce_chunk=32)
+
+
+def _final_loss(cfg, strategy, m, sweeps=6, seed=0):
+    params = T.init(cfg, jax.random.PRNGKey(0))
+    runner = HiFTRunner(cfg, params, make_optimizer("adamw"),
+                        HiFTConfig(m=m, strategy=strategy, seed=seed),
+                        LRSchedule(base_lr=2e-3))
+    data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=64, global_batch=8,
+                                  seed=3))
+    losses = []
+    for s in range(runner.k * sweeps):
+        losses.append(float(runner.train_step(data.batch_at(s % 4))))
+    return float(np.mean(losses[-runner.k:]))
+
+
+def run(csv=True):
+    cfg = _cfg()
+    rows = []
+    t0 = time.time()
+    for strategy in ["bottom2up", "top2down", "random"]:
+        l = _final_loss(cfg, strategy, m=1)
+        rows.append((f"strategy/{strategy}", l))
+    for m in [1, 2, 3, 6]:
+        l = _final_loss(cfg, "bottom2up", m=m)
+        rows.append((f"grouping/m={m}", l))
+    us = (time.time() - t0) * 1e6 / len(rows)
+    vals = [l for _, l in rows]
+    spread = max(vals) - min(vals)
+    if csv:
+        for name, l in rows:
+            print(f"strategy_equivalence/{name},{us:.0f},final_loss={l:.4f}")
+        print(f"strategy_equivalence/spread,0,max_minus_min={spread:.4f}")
+    # paper claim: order/grouping impact negligible
+    assert spread < 0.8, f"strategy/grouping spread too large: {vals}"
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

@@ -1,0 +1,40 @@
+"""Paper Fig. 6(e) analogue: peak trainable-parameter FRACTION vs model size
+(must shrink as models grow; paper: ~2.44% at 13B)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.configs.registry import get_config
+from repro.core.grouping import make_groups
+from repro.core.memory_model import _Accountant
+from repro.models import get_family
+
+MODELS = ["roberta_base", "roberta_large", "gpt2_large", "gpt_neo_2_7b",
+          "llama2_7b", "deepseek_7b", "internvl2_26b", "arctic_480b"]
+
+
+def run(csv=True):
+    rows = []
+    for arch in MODELS:
+        cfg = get_config(arch)
+        fam = get_family(cfg)
+        shapes = jax.eval_shape(partial(fam.init, cfg), jax.random.PRNGKey(0))
+        units = fam.unit_spec(cfg)
+        acc = _Accountant(shapes, units)
+        groups = make_groups(units, 1)
+        peak = max(acc.group_params(g) for g in groups)
+        frac = peak / acc.total()
+        rows.append((arch, acc.total(), peak, frac))
+        if csv:
+            print(f"trainable_params/{arch},0,total={acc.total()/1e6:.1f}M;"
+                  f"peak={peak/1e6:.1f}M;fraction={frac*100:.2f}%")
+    fr = [r[3] for r in rows]
+    assert fr[-1] < fr[0], "fraction must shrink with model size"
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

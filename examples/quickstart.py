@@ -1,0 +1,36 @@
+"""Quickstart: fine-tune a small LM with HiFT in ~30 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.configs.base import ArchConfig
+from repro.core import HiFTConfig, HiFTRunner, LRSchedule
+from repro.data.synthetic import DataConfig, PrefetchIterator, SyntheticLM
+from repro.models import transformer as T
+from repro.optim import make_optimizer
+
+cfg = ArchConfig(name="quickstart", family="dense", n_layers=4, d_model=128,
+                 n_heads=4, kv_heads=2, d_ff=256, vocab=512,
+                 block_q=32, block_k=32, ce_chunk=32)
+
+params = T.init(cfg, jax.random.PRNGKey(0))
+runner = HiFTRunner(
+    cfg, params,
+    optimizer=make_optimizer("adamw"),
+    hift=HiFTConfig(m=1, strategy="bottom2up"),   # paper Algorithm 1
+    schedule=LRSchedule(base_lr=2e-3),            # delayed per-cycle LR
+)
+print(f"HiFT: {runner.k} groups, peak trainable "
+      f"{runner.peak_trainable_params()/1e3:.0f}k / "
+      f"{runner.total_params()/1e3:.0f}k params per step")
+
+data = PrefetchIterator(SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=64,
+                                               global_batch=8)))
+for step in range(runner.k * 6):
+    loss = runner.train_step(next(data))
+    if step % runner.k == 0:
+        print(f"sweep {step // runner.k}: loss {float(loss):.4f} "
+              f"(lr {runner.lr_for_step():.2e}, "
+              f"group {runner.group_for_step().label()})")
+print("done.")

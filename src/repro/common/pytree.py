@@ -1,0 +1,93 @@
+"""Pytree path utilities shared across the framework.
+
+Parameters are nested dicts of jnp arrays.  HiFT needs to split a model's
+parameter tree into an *active* sub-tree (differentiated + updated this step)
+and a *frozen* sub-tree, keyed by '/'-joined paths, and to merge them back.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Iterable, Mapping
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def _key_str(k) -> str:
+    if isinstance(k, jax.tree_util.DictKey):
+        return str(k.key)
+    if isinstance(k, jax.tree_util.SequenceKey):
+        return str(k.idx)
+    if isinstance(k, jax.tree_util.GetAttrKey):
+        return str(k.name)
+    return str(k)
+
+
+def flatten_with_paths(tree: PyTree) -> dict[str, jnp.ndarray]:
+    """Flatten a pytree into {'a/b/c': leaf} with '/'-joined paths."""
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return {"/".join(_key_str(k) for k in path): leaf for path, leaf in leaves}
+
+
+def tree_paths(tree: PyTree) -> list[str]:
+    return list(flatten_with_paths(tree).keys())
+
+
+def unflatten_from_paths(flat: Mapping[str, Any]) -> PyTree:
+    """Inverse of flatten_with_paths for dict-of-dicts trees."""
+    out: dict = {}
+    for path, leaf in flat.items():
+        parts = path.split("/")
+        node = out
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = leaf
+    return out
+
+
+def split_tree(tree: PyTree, predicate: Callable[[str], bool]) -> tuple[PyTree, PyTree]:
+    """Split into (selected, rest) by path predicate.  Structure is preserved
+    as two disjoint dict trees (missing branches simply absent)."""
+    flat = flatten_with_paths(tree)
+    sel = {p: v for p, v in flat.items() if predicate(p)}
+    rest = {p: v for p, v in flat.items() if p not in sel}
+    return unflatten_from_paths(sel), unflatten_from_paths(rest)
+
+
+def merge_trees(*trees: PyTree) -> PyTree:
+    """Merge disjoint dict trees produced by split_tree."""
+    flat: dict[str, Any] = {}
+    for t in trees:
+        f = flatten_with_paths(t)
+        overlap = set(flat) & set(f)
+        if overlap:
+            raise ValueError(f"overlapping paths in merge: {sorted(overlap)[:5]}")
+        flat.update(f)
+    return unflatten_from_paths(flat)
+
+
+def tree_size(tree: PyTree) -> int:
+    """Total number of scalar parameters."""
+    return sum(int(x.size) for x in jax.tree.leaves(tree))
+
+
+def tree_bytes(tree: PyTree) -> int:
+    return sum(int(x.size) * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+def tree_cast(tree: PyTree, dtype) -> PyTree:
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, tree
+    )
+
+
+def tree_zeros_like(tree: PyTree, dtype=None) -> PyTree:
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, dtype or x.dtype), tree)
+
+
+def assert_finite(tree: PyTree, where: str = "") -> None:
+    for p, leaf in flatten_with_paths(tree).items():
+        if jnp.issubdtype(leaf.dtype, jnp.floating):
+            if not bool(jnp.isfinite(leaf).all()):
+                raise FloatingPointError(f"non-finite values at {where}:{p}")

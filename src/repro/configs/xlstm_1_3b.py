@@ -1,0 +1,14 @@
+"""xLSTM-1.3B [arXiv:2405.04517; unverified] — mLSTM + sLSTM blocks,
+7:1 ratio (one sLSTM per 8-layer super-block), matrix-memory decode."""
+import dataclasses
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="xlstm-1.3b", family="xlstm", n_layers=48, d_model=2048,
+    n_heads=4, kv_heads=4, d_ff=0, vocab=50304, expand=2, slstm_every=8,
+    remat="layer",
+    grad_accum=2,
+)
+SMOKE = dataclasses.replace(
+    CONFIG, name="xlstm-smoke", n_layers=4, d_model=32, n_heads=4,
+    kv_heads=4, vocab=512, slstm_every=2, block_q=16, block_k=16)

@@ -1,0 +1,6 @@
+"""HiFT core: the paper's contribution."""
+from repro.core.grouping import Group, make_groups, order_groups, split_params, merge_params, group_cut
+from repro.core.scheduler import LRSchedule
+from repro.core.hift import HiFTConfig, HiFTRunner, write_back
+from repro.core.fpft import FPFTRunner, build_fpft_step
+from repro.core import memory_model

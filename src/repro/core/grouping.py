@@ -1,0 +1,124 @@
+"""HiFT grouping + update strategies (paper §3, Algorithm 1).
+
+Units come from the model's ``unit_spec``; groups are contiguous spans of m
+units.  The strategy only permutes the ORDER in which groups are visited
+(bottom2up / top2down / random-once) — group membership never changes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.models.base import Unit
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Group:
+    """One HiFT group: dense unit keys + contiguous ranges of stacked segments."""
+    index: int
+    units: tuple[Unit, ...]
+    dense_keys: tuple[str, ...]                 # fully-owned top-level keys
+    stacked_ranges: tuple[tuple[str, int, int], ...]  # (key, lo, hi)
+
+    def label(self) -> str:
+        parts = list(self.dense_keys)
+        parts += [f"{k}[{lo}:{hi}]" for k, lo, hi in self.stacked_ranges]
+        return f"g{self.index}(" + ",".join(parts) + ")"
+
+
+def make_groups(units: Sequence[Unit], m: int) -> list[Group]:
+    """Partition ordered units into ceil(n/m) groups of m consecutive units
+    (paper: k = n/m, or floor(n/m)+1 when m does not divide n)."""
+    if m <= 0:
+        raise ValueError("m must be >= 1")
+    groups = []
+    for gi, start in enumerate(range(0, len(units), m)):
+        chunk = tuple(units[start:start + m])
+        dense = tuple(u.key for u in chunk if u.kind == "dense")
+        ranges: dict[str, list[int]] = {}
+        for u in chunk:
+            if u.kind == "stacked":
+                ranges.setdefault(u.key, []).append(u.index)
+        stacked = []
+        for key, idxs in ranges.items():
+            lo, hi = min(idxs), max(idxs) + 1
+            if sorted(idxs) != list(range(lo, hi)):
+                raise ValueError(f"non-contiguous unit indices for {key}: {idxs}")
+            stacked.append((key, lo, hi))
+        groups.append(Group(gi, chunk, dense, tuple(stacked)))
+    return groups
+
+
+def order_groups(groups: Sequence[Group], strategy: str,
+                 seed: int = 0) -> list[int]:
+    """Visit order over group indices.  'random' shuffles ONCE before
+    training and keeps that order for the whole run (paper §3.1)."""
+    idx = list(range(len(groups)))
+    if strategy == "bottom2up":
+        return idx
+    if strategy == "top2down":
+        return idx[::-1]
+    if strategy == "random":
+        rng = np.random.RandomState(seed)
+        rng.shuffle(idx)
+        return idx
+    raise ValueError(f"unknown strategy {strategy!r}")
+
+
+# ------------------------------------------------------ param split / merge
+
+def split_params(params: PyTree, group: Group) -> tuple[PyTree, PyTree]:
+    """(active, frozen) for a group.  Stacked segments are sliced; the frozen
+    side holds the pre/post remainders under reserved keys."""
+    active: dict = {}
+    frozen: dict = {}
+    taken_stacked = {k: (lo, hi) for k, lo, hi in group.stacked_ranges}
+    for key, sub in params.items():
+        if key in group.dense_keys:
+            active[key] = sub
+        elif key in taken_stacked:
+            lo, hi = taken_stacked[key]
+            active[key] = jax.tree.map(lambda x: x[lo:hi], sub)
+            frozen[f"{key}__pre"] = jax.tree.map(lambda x: x[:lo], sub)
+            frozen[f"{key}__post"] = jax.tree.map(lambda x: x[hi:], sub)
+        else:
+            frozen[key] = sub
+    return active, frozen
+
+
+def merge_params(active: PyTree, frozen: PyTree, group: Group) -> PyTree:
+    """Inverse of split_params: reconstruct the full tree (concat slices).
+    Gradients w.r.t. ``active`` flow through the concatenation."""
+    import jax.numpy as jnp
+
+    out: dict = {}
+    taken_stacked = {k for k, _, _ in group.stacked_ranges}
+    for key, sub in active.items():
+        if key in taken_stacked:
+            pre = frozen[f"{key}__pre"]
+            post = frozen[f"{key}__post"]
+            out[key] = jax.tree.map(
+                lambda a, b, c: jnp.concatenate([a, b, c], axis=0), pre, sub, post)
+        else:
+            out[key] = sub
+    for key, sub in frozen.items():
+        if key.endswith("__pre") or key.endswith("__post"):
+            continue
+        out[key] = sub
+    return out
+
+
+def group_cut(cfg, group: Group, unit_first_depth) -> Optional[int]:
+    """Backward-cut depth for this group: the min first-use depth over its
+    units.  None (= FPFT-style full backward) when the embed unit is active."""
+    depths = []
+    for u in group.units:
+        if u.key == "embed":
+            return None
+        depths.append(unit_first_depth(cfg, u))
+    return min(depths) if depths else None

@@ -1,0 +1,148 @@
+"""Analytical accelerator-memory accounting — paper Appendix B + Tables 8-12.
+
+zeta_1 = bytes of weight parameters, zeta_2 = optimizer state, zeta_3 =
+gradients.  FPFT(AdamW, fp32) = 4*zeta_1; HiFT = zeta_1 + 3*zeta_1/k
+(only the active group's grads + moments are resident).
+
+Operates on SHAPE trees (jax.eval_shape of the init fn) so 480B configs are
+analyzed without allocating anything.  Reproduces the paper's
+#Para/#Gra/#Sta/#PGS columns for any (model, optimizer, precision, m);
+exercised by benchmarks/memory_table.py against the published numbers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Sequence
+
+from repro.common.pytree import flatten_with_paths
+from repro.core.grouping import Group, make_groups
+from repro.models.base import Unit
+
+PyTree = Any
+
+_STATE_MULT = {  # optimizer state floats per fp32 param
+    "adamw": 2.0,
+    "sgdm": 1.0,
+    "sgd": 0.0,
+    "adagrad": 1.0,
+    "adafactor": 0.0,   # sub-linear; computed exactly below
+}
+
+
+def _size(leaf) -> int:
+    return int(math.prod(leaf.shape)) if leaf.shape else 1
+
+
+@dataclasses.dataclass(frozen=True)
+class MemoryReport:
+    n_params: int
+    peak_trainable: int
+    para_mb: float          # resident weights (#Para)
+    grad_mb: float          # gradients (#Gra)
+    state_mb: float         # optimizer states (#Sta)
+    pgs_gb: float           # #PGS = para + grad + state
+
+    def as_row(self) -> str:
+        return (f"{self.n_params/1e6:9.2f}M {self.peak_trainable/1e6:9.2f}M "
+                f"{self.para_mb:10.2f} {self.grad_mb:10.2f} {self.state_mb:10.2f} "
+                f"{self.pgs_gb:8.2f}")
+
+
+class _Accountant:
+    """Maps HiFT groups to param counts from a flat {path: leaf} shape dict."""
+
+    def __init__(self, shapes: PyTree, units: Sequence[Unit]):
+        self.flat = flatten_with_paths(shapes)
+        self.units = list(units)
+        # stacked segment lengths
+        self.stack_len: dict[str, int] = {}
+        for u in units:
+            if u.kind == "stacked":
+                self.stack_len[u.key] = max(self.stack_len.get(u.key, 0), u.index + 1)
+
+    def key_size(self, key: str) -> int:
+        return sum(_size(l) for p, l in self.flat.items()
+                   if p == key or p.startswith(key + "/"))
+
+    def group_params(self, g: Group) -> int:
+        total = sum(self.key_size(k) for k in g.dense_keys)
+        for key, lo, hi in g.stacked_ranges:
+            total += self.key_size(key) * (hi - lo) // self.stack_len[key]
+        return total
+
+    def group_adafactor_bytes(self, g: Group) -> int:
+        total = 0
+        for p, l in self.flat.items():
+            top = p.split("/")[0]
+            n_layers = 1
+            if top in {k for k, _, _ in g.stacked_ranges}:
+                lo, hi = next((lo, hi) for k, lo, hi in g.stacked_ranges if k == top)
+                n_layers = hi - lo
+                shape = l.shape[1:]
+            elif top in g.dense_keys:
+                shape = l.shape
+            else:
+                continue
+            if len(shape) >= 2:
+                total += (shape[-2] + shape[-1]) * 4 * n_layers
+            else:
+                total += int(math.prod(shape or (1,))) * 4 * n_layers
+        return total
+
+    def total(self) -> int:
+        return sum(_size(l) for l in self.flat.values())
+
+
+def analyze(shapes: PyTree, units: Sequence[Unit], *, optimizer: str = "adamw",
+            precision: str = "fp32", mode: str = "hift", m: int = 1) -> MemoryReport:
+    """shapes: params tree or jax.eval_shape(init) tree.
+    precision: fp32 | mixed | mixed_hi.  mode: fpft | hift."""
+    acc = _Accountant(shapes, units)
+    n = acc.total()
+    groups = make_groups(acc.units, m)
+    k = len(groups)
+
+    if mode == "fpft":
+        peak = n
+        groups_for_state = None
+    else:
+        sizes = [acc.group_params(g) for g in groups]
+        peak = max(sizes)
+
+    # --- weights resident (#Para) ---
+    if precision == "fp32":
+        para = 4 * n
+    elif precision == "mixed":
+        para = 4 * n + 2 * n            # fp32 master + bf16 compute copy
+    elif precision == "mixed_hi":
+        para = 2 * n + 4 * peak         # bf16 resident + fp32 master of active
+    else:
+        raise ValueError(precision)
+
+    grad = 4 * peak                      # fp32 grads of trainable params
+
+    if optimizer == "adafactor":
+        if mode == "fpft":
+            whole = Group(0, tuple(acc.units),
+                          tuple(u.key for u in acc.units if u.kind == "dense"),
+                          tuple((key, 0, ln) for key, ln in acc.stack_len.items()))
+            state = acc.group_adafactor_bytes(whole)
+        else:
+            state = max(acc.group_adafactor_bytes(g) for g in groups)
+    else:
+        state = int(_STATE_MULT[optimizer] * 4 * peak) if mode == "hift" \
+            else int(_STATE_MULT[optimizer] * 4 * n)
+
+    return MemoryReport(
+        n_params=n, peak_trainable=peak,
+        para_mb=para / 2**20, grad_mb=grad / 2**20, state_mb=state / 2**20,
+        pgs_gb=(para + grad + state) / 2**30,
+    )
+
+
+def paper_equation_check(zeta1_gb: float, k: int) -> tuple[float, float, float]:
+    """Eq. 11-13: (fpft_gb, hift_gb, saved_gb) for AdamW fp32."""
+    fpft = 4 * zeta1_gb
+    hift = (k + 3) / k * zeta1_gb
+    return fpft, hift, fpft - hift

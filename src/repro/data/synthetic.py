@@ -1,0 +1,82 @@
+"""Deterministic synthetic LM data pipeline.
+
+Produces reproducible token streams keyed by (seed, step, host) so that:
+  - a restarted job resumes the EXACT stream (fault tolerance),
+  - each host materializes only its own shard (per-host data sharding),
+  - stragglers can be replaced: the substitute host regenerates the same
+    shard from (seed, step) with no data server involved.
+
+The "task" is a learnable synthetic language: a fixed random Markov chain
+over the vocab, so loss decreases meaningfully (used by convergence tests
+and the end-to-end example), plus a pure-uniform mode for shape-only tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    mode: str = "markov"      # markov | uniform
+    branching: int = 4         # successors per token in markov mode
+    n_hosts: int = 1
+    host_id: int = 0
+
+
+class SyntheticLM:
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        if cfg.global_batch % cfg.n_hosts != 0:
+            raise ValueError("global_batch must divide evenly across hosts")
+        self.per_host = cfg.global_batch // cfg.n_hosts
+        rng = np.random.RandomState(cfg.seed)
+        # fixed transition table: token t -> one of `branching` successors
+        self.table = rng.randint(0, cfg.vocab,
+                                 size=(cfg.vocab, cfg.branching)).astype(np.int32)
+
+    def batch_at(self, step: int) -> dict:
+        """Batch for a given global step — pure function of (seed, step, host)."""
+        cfg = self.cfg
+        rng = np.random.RandomState(
+            (cfg.seed * 1_000_003 + step * 1_009 + cfg.host_id) % (2**31 - 1))
+        if cfg.mode == "uniform":
+            toks = rng.randint(0, cfg.vocab, size=(self.per_host, cfg.seq_len))
+        else:
+            toks = np.empty((self.per_host, cfg.seq_len), np.int32)
+            toks[:, 0] = rng.randint(0, cfg.vocab, size=self.per_host)
+            choices = rng.randint(0, cfg.branching,
+                                  size=(self.per_host, cfg.seq_len - 1))
+            for t in range(1, cfg.seq_len):
+                toks[:, t] = self.table[toks[:, t - 1], choices[:, t - 1]]
+        toks = jnp.asarray(toks, jnp.int32)
+        return {"tokens": toks, "labels": toks}
+
+    def __iter__(self) -> Iterator[dict]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+class PrefetchIterator:
+    """One-batch lookahead so host-side generation overlaps device compute."""
+
+    def __init__(self, source: SyntheticLM, start_step: int = 0):
+        self.source = source
+        self.step = start_step
+        self._next = source.batch_at(start_step)
+
+    def __next__(self) -> dict:
+        out = self._next
+        self.step += 1
+        self._next = self.source.batch_at(self.step)
+        return out

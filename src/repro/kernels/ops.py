@@ -1,0 +1,45 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On this CPU container interpret=True (Python emulation of the kernel body);
+on TPU the same call sites compile to Mosaic.  ``INTERPRET`` flips globally.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "block_q", "block_k"))
+def flash_attention(q, k, v, causal: bool = True, block_q: int = 256,
+                    block_k: int = 256):
+    from repro.kernels.flash_attention import flash_attention_pallas
+    return flash_attention_pallas(q, k, v, causal=causal, block_q=block_q,
+                                  block_k=block_k, interpret=INTERPRET)
+
+
+def fused_adamw_update(params, grads, m, v, *, lr, b1, b2, eps, weight_decay,
+                       c1, c2):
+    """Pytree-wide fused AdamW (one Pallas launch per leaf)."""
+    from repro.kernels.fused_adamw import fused_adamw_pallas
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(m)
+    flat_v = treedef.flatten_up_to(v)
+    out = [fused_adamw_pallas(p, g, mm, vv, lr=lr, b1=b1, b2=b2, eps=eps,
+                              weight_decay=weight_decay, c1=c1, c2=c2,
+                              interpret=INTERPRET)
+           for p, g, mm, vv in zip(flat_p, flat_g, flat_m, flat_v)]
+    return (treedef.unflatten([o[0] for o in out]),
+            treedef.unflatten([o[1] for o in out]),
+            treedef.unflatten([o[2] for o in out]))
+
+
+@partial(jax.jit, static_argnames=("chunk",))
+def ssm_scan(x, a_log, b, c, chunk: int = 128):
+    from repro.kernels.ssm_scan import ssm_scan_pallas
+    return ssm_scan_pallas(x, a_log, b, c, chunk=chunk, interpret=INTERPRET)

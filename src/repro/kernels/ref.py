@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, causal: bool = True):
+    """q/k/v: (B, S, H, hd) -> (B, S, H, hd), fp32 softmax."""
+    b, s, h, hd = q.shape
+    scale = 1.0 / math.sqrt(hd)
+    sc = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        sc = jnp.where(mask[None, None], sc, -1e30)
+    p = jax.nn.softmax(sc, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v)
+
+
+def fused_adamw_ref(p, g, m, v, *, lr, b1, b2, eps, weight_decay, c1, c2):
+    """Elementwise AdamW with bias-corrected moments (fp32 math)."""
+    g32 = g.astype(jnp.float32)
+    m_ = b1 * m + (1.0 - b1) * g32
+    v_ = b2 * v + (1.0 - b2) * jnp.square(g32)
+    mhat = m_ / c1
+    vhat = v_ / c2
+    p32 = p.astype(jnp.float32)
+    step = lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p32)
+    return (p32 - step).astype(p.dtype), m_, v_
+
+
+def ssm_scan_ref(x, a, b, c):
+    """Sequential gated linear scan per head.
+
+    x: (B, S, H, P) scaled inputs; a: (B, S, H) decay in (0,1];
+    b/c: (B, S, N).  h_t = a_t h_{t-1} + b_t (x) x_t;  y_t = c_t . h_t.
+    Returns (y (B,S,H,P), h_final (B,H,P,N))."""
+    B, S, H, P = x.shape
+    N = b.shape[-1]
+
+    def step(h, t):
+        at, xt, bt, ct = t
+        h = h * at[..., None, None] + xt[..., :, None] * bt[:, None, None, :]
+        y = jnp.einsum("bhpn,bn->bhp", h, ct)
+        return h, y
+
+    h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    xs = (jnp.moveaxis(a, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(x, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(b, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(c, 1, 0).astype(jnp.float32))
+    hf, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), hf

@@ -1,0 +1,314 @@
+"""Analytic FLOP / HBM-byte cost model per (arch x shape).
+
+WHY ANALYTIC: XLA's ``compiled.cost_analysis()`` counts a ``while`` body
+(lax.scan over layers / attention blocks / SSD chunks) exactly ONCE, so it
+undercounts a scanned transformer by ~n_layers x (verified in EXPERIMENTS.md
+§Dry-run).  The roofline therefore uses this explicit, auditable cost model;
+the compiled artifact supplies the memory fit and the collective schedule.
+
+Conventions:
+  - flops count multiply-adds as 2 ops, per GLOBAL step (whole batch)
+  - backward: dX (activation grads) ~= 1x forward of the layer, dW (weight
+    grads) ~= 1x forward; a frozen layer above the HiFT cut pays only dX;
+    layers below the cut pay nothing (stop_gradient)
+  - hbm_bytes: weight traffic (read fwd + read bwd + opt update of the
+    active group) + activation traffic (ACT_RW * residual-stream bytes)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+BF16 = 2
+FP32 = 4
+ACT_RW = 12  # residual-stream read/write factor fwd+bwd (norms, attn, mlp)
+
+
+@dataclasses.dataclass(frozen=True)
+class CostReport:
+    flops: float            # total executed flops per step (global)
+    model_flops: float      # 6*N*D (dense) or 6*N_active*D (MoE)
+    hbm_bytes: float        # per-step HBM traffic (global, all devices)
+    n_params: float
+    n_active_params: float  # per-token active params (MoE-aware)
+    notes: str = ""
+
+
+# --------------------------------------------------------------- primitives
+
+def _attn_flops(cfg: ArchConfig, S: int, T: int, causal: bool,
+                balanced: bool) -> float:
+    """Per-sequence attention-core flops: q len S against kv len T.
+    Baseline chunked-causal computes the FULL S*T score matrix (masked) =
+    2x the useful causal work; ``balanced`` pays (S*T/2 + S*block)."""
+    hd = cfg.head_dim
+    per_pair = 4 * cfg.n_heads * hd   # qk^T + pv, 2 flops/maeach
+    if not causal:
+        return per_pair * S * T
+    if balanced:
+        useful = S * T / 2 + S * cfg.block_k
+        return per_pair * useful
+    return per_pair * S * T           # masked full sweep
+
+
+def _dense_layer_proj_flops(cfg: ArchConfig) -> float:
+    """Per-token projection flops of one dense block (qkv+o+swiglu)."""
+    d, hd = cfg.d_model, cfg.head_dim
+    qkv = 2 * d * (cfg.n_heads * hd + 2 * cfg.kv_heads * hd)
+    wo = 2 * d * cfg.n_heads * hd
+    mlp = 6 * d * cfg.d_ff
+    return qkv + wo + mlp
+
+
+def _moe_layer_proj_flops(cfg: ArchConfig) -> float:
+    d = cfg.d_model
+    qkv = 2 * d * (cfg.n_heads + 2 * cfg.kv_heads) * cfg.head_dim
+    wo = 2 * d * cfg.n_heads * cfg.head_dim
+    router = 2 * d * cfg.n_experts
+    experts = 6 * d * cfg.moe_d_ff * cfg.top_k * cfg.capacity_factor
+    shared = 6 * d * cfg.moe_d_ff * cfg.n_shared_experts
+    dense_res = 6 * d * cfg.d_ff if cfg.dense_residual else 0.0
+    return qkv + wo + router + experts + shared + dense_res
+
+
+def _mamba_layer_flops(cfg: ArchConfig, chunk: int = 128) -> float:
+    """Per-token flops of one Mamba2 block (projections + chunked SSD)."""
+    d = cfg.d_model
+    di = cfg.expand * d
+    N, H = cfg.ssm_state, cfg.ssm_heads
+    P = di // H
+    in_proj = 2 * d * (2 * di + 2 * N + H)
+    conv = 2 * cfg.conv_width * (di + 2 * N)
+    Lc = chunk
+    ssd = (2 * Lc * N            # C.B scores row
+           + 2 * H * Lc * P      # intra-chunk y
+           + 4 * H * N * P)      # state build + inter-chunk y
+    out_proj = 2 * di * d
+    return in_proj + conv + ssd + out_proj
+
+
+def _mlstm_layer_flops(cfg: ArchConfig, chunk: int = 128) -> float:
+    d = cfg.d_model
+    di = cfg.expand * d
+    H = cfg.n_heads
+    hd = di // H
+    proj = 2 * d * di * 2 + 3 * 2 * di * di + 2 * di * d  # up,gate,qkv,down
+    Lc = chunk
+    scan = H * (2 * Lc * hd + 2 * Lc * (hd + 1) + 4 * hd * (hd + 1))
+    return proj + scan
+
+
+def _slstm_layer_flops(cfg: ArchConfig) -> float:
+    d = cfg.d_model
+    dh = d // cfg.n_heads
+    return 2 * d * 4 * d + 4 * 2 * d * dh + 2 * d * d
+
+
+# ------------------------------------------------------------- param counts
+
+def param_count(cfg: ArchConfig) -> tuple[float, float]:
+    """(total params, per-token ACTIVE params).  Active discounts routed
+    experts to top_k/E (MoE) — the 6*N_active*D convention."""
+    d, V = cfg.d_model, cfg.vocab
+    embed = V * d
+    head = V * d + d
+    if cfg.family in ("dense", "vlm"):
+        layer = (d * (cfg.n_heads + 2 * cfg.kv_heads) * cfg.head_dim
+                 + cfg.n_heads * cfg.head_dim * d + 3 * d * cfg.d_ff + 2 * d)
+        total = embed + head + cfg.n_layers * layer
+        return total, total
+    if cfg.family == "moe":
+        attn = (d * (cfg.n_heads + 2 * cfg.kv_heads) * cfg.head_dim
+                + cfg.n_heads * cfg.head_dim * d)
+        experts = 3 * d * cfg.moe_d_ff * cfg.n_experts
+        shared = 3 * d * cfg.moe_d_ff * cfg.n_shared_experts
+        dense_res = 3 * d * cfg.d_ff if cfg.dense_residual else 0.0
+        router = d * cfg.n_experts
+        layer = attn + experts + shared + dense_res + router + 2 * d
+        total = embed + head + cfg.n_layers * layer
+        active_layer = (attn + 3 * d * cfg.moe_d_ff * cfg.top_k + shared
+                        + dense_res + router + 2 * d)
+        return total, embed + head + cfg.n_layers * active_layer
+    if cfg.family == "hybrid":
+        di = cfg.expand * d
+        N, H = cfg.ssm_state, cfg.ssm_heads
+        mamba = (d * (2 * di + 2 * N + H) + cfg.conv_width * (di + 2 * N)
+                 + 3 * H + di + di * d + d)
+        shared = (d * (cfg.n_heads + 2 * cfg.kv_heads) * cfg.head_dim
+                  + cfg.n_heads * cfg.head_dim * d + 3 * d * cfg.d_ff + 2 * d)
+        total = embed + head + cfg.n_layers * mamba + shared
+        return total, total
+    if cfg.family == "xlstm":
+        di = cfg.expand * d
+        H = cfg.n_heads
+        n_sb = cfg.n_layers // cfg.slstm_every
+        n_m = n_sb * (cfg.slstm_every - 1)
+        mlstm = 2 * d * di + 3 * di * di + 2 * di * H + di + di * d + 2 * d
+        slstm = d * 4 * d + 4 * H * (d // H) ** 2 + 4 * d + d * d + d
+        total = embed + head + n_m * mlstm + n_sb * slstm
+        return total, total
+    if cfg.family == "encdec":
+        attn = (d * (cfg.n_heads + 2 * cfg.kv_heads) * cfg.head_dim
+                + cfg.n_heads * cfg.head_dim * d)
+        mlp = 2 * d * cfg.d_ff + cfg.d_ff + d
+        enc = cfg.enc_layers * (attn + mlp + 4 * d)
+        dec = cfg.dec_layers * (2 * attn + mlp + 6 * d)
+        total = embed + d * d + head + enc + dec
+        return total, total
+    raise ValueError(cfg.family)
+
+
+def weight_bytes(cfg: ArchConfig, dtype_bytes: int = BF16) -> float:
+    return param_count(cfg)[0] * dtype_bytes
+
+
+# --------------------------------------------------------------- train cost
+
+def train_cost(cfg: ArchConfig, shape: ShapeConfig,
+               cut: Optional[int] = None, active_layers: int = 1,
+               head_active: bool = False, embed_active: bool = False) -> CostReport:
+    """Cost of ONE HiFT train step (or FPFT when cut=None & all active).
+
+    cut: #layers below the stop_gradient (None = full backward).
+    active_layers: #layers whose dW is computed this step.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    D = B * S
+    total_p, active_p = param_count(cfg)
+    causal = cfg.family != "encdec"
+
+    if cfg.family in ("dense", "vlm"):
+        per_layer_tok = _dense_layer_proj_flops(cfg)
+        attn_seq = _attn_flops(cfg, S, S, True, cfg.attention_balanced)
+        layer_fwd = per_layer_tok * D + attn_seq * B
+        L = cfg.n_layers
+    elif cfg.family == "moe":
+        per_layer_tok = _moe_layer_proj_flops(cfg)
+        attn_seq = _attn_flops(cfg, S, S, True, cfg.attention_balanced)
+        layer_fwd = per_layer_tok * D + attn_seq * B
+        L = cfg.n_layers
+    elif cfg.family == "hybrid":
+        mamba_fwd = _mamba_layer_flops(cfg) * D
+        n_sb = cfg.n_layers // cfg.attn_every
+        shared_fwd = (_dense_layer_proj_flops(cfg) * D
+                      + _attn_flops(cfg, S, S, True, cfg.attention_balanced) * B)
+        # express as an average per "layer" over n_layers mamba + n_sb shared
+        layer_fwd = mamba_fwd + shared_fwd * n_sb / cfg.n_layers
+        L = cfg.n_layers
+    elif cfg.family == "xlstm":
+        n_sb = cfg.n_layers // cfg.slstm_every
+        m_per = cfg.slstm_every - 1
+        layer_fwd = ((_mlstm_layer_flops(cfg) * m_per + _slstm_layer_flops(cfg))
+                     / cfg.slstm_every) * D
+        L = cfg.n_layers
+    elif cfg.family == "encdec":
+        Sd = max(S // 4, 8)
+        D = B * Sd  # decoder tokens carry the loss
+        enc_layer = (_dense_layer_proj_flops(cfg) * B * S
+                     + _attn_flops(cfg, S, S, False, False) * B)
+        dec_layer = (_dense_layer_proj_flops(cfg) * B * Sd
+                     + _attn_flops(cfg, Sd, Sd, True, cfg.attention_balanced) * B
+                     + _attn_flops(cfg, Sd, S, False, False) * B
+                     + 2 * cfg.d_model * cfg.n_heads * cfg.head_dim * B * Sd * 2)
+        fwd = cfg.enc_layers * enc_layer + cfg.dec_layers * dec_layer
+        head_fwd = 2 * cfg.d_model * cfg.vocab * D
+        nl = cfg.enc_layers + cfg.dec_layers
+        cut = min(cut if cut is not None else 0, nl)
+        avg_layer = fwd / nl
+        bwd = avg_layer * (nl - cut) + avg_layer * active_layers
+        head_bwd = 2 * head_fwd if head_active else head_fwd
+        flops = fwd + head_fwd + bwd + head_bwd
+        wb = weight_bytes(cfg) * (2 + active_layers / nl)
+        act = ACT_RW * B * (S + Sd) * cfg.d_model * BF16 * nl
+        return CostReport(flops, 6 * active_p * D, wb + act, total_p, active_p)
+    else:
+        raise ValueError(cfg.family)
+
+    fwd = layer_fwd * L
+    head_fwd = 2 * cfg.d_model * cfg.vocab * D
+    embed_fwd = 0.0  # lookup is a gather
+
+    c = min(cut if cut is not None else 0, L)
+    bwd_dx = layer_fwd * (L - c)            # activation grads above the cut
+    bwd_dw = layer_fwd * active_layers      # weight grads of the active group
+    # remat="layer" recomputes the forward of every layer above the cut
+    # during backward (activation checkpointing's flops tax)
+    remat_fwd = layer_fwd * (L - c) if cfg.remat == "layer" else 0.0
+    head_bwd = 2 * head_fwd if head_active else head_fwd
+    flops = fwd + head_fwd + bwd_dx + bwd_dw + head_bwd + remat_fwd
+
+    # HBM traffic: weights fwd read + bwd read above the cut + active update
+    wbytes = weight_bytes(cfg)
+    per_layer_w = wbytes / max(L, 1)
+    w_traffic = wbytes + per_layer_w * (L - c) + per_layer_w * active_layers * 3
+    act_traffic = ACT_RW * D * cfg.d_model * BF16 * (L + (L - c))
+    attn_extra = 0.0
+    if cfg.family in ("dense", "vlm", "moe"):
+        # kv reads during chunked attention fwd+bwd
+        attn_extra = 2 * B * S * cfg.kv_heads * cfg.head_dim * BF16 * L * 3
+    hbm = w_traffic + act_traffic + attn_extra
+
+    return CostReport(flops, 6 * active_p * D, hbm, total_p, active_p)
+
+
+# -------------------------------------------------------------- serve cost
+
+def serve_cost(cfg: ArchConfig, shape: ShapeConfig, kind: str) -> CostReport:
+    """kind: prefill | decode.  decode = 1 new token vs cache len S."""
+    B, S = shape.global_batch, shape.seq_len
+    total_p, active_p = param_count(cfg)
+    wbytes = weight_bytes(cfg)
+
+    if kind == "prefill":
+        # forward-only = train_cost with an infinite cut (no backward at all),
+        # minus the full-sequence head (prefill computes last-token logits only)
+        rep_f = train_cost(cfg, shape, cut=10**9, active_layers=0, head_active=False)
+        full_head = 2 * cfg.d_model * cfg.vocab * B * (S if cfg.family != "encdec"
+                                                       else max(S // 4, 8))
+        flops = rep_f.flops - 2 * full_head + 2 * cfg.d_model * cfg.vocab * B
+        hbm = wbytes + ACT_RW / 2 * B * S * cfg.d_model * BF16 * cfg.n_layers
+        return CostReport(max(flops, 0), 2 * active_p * B * S, hbm, total_p, active_p)
+
+    # decode
+    D = B  # one token per sequence
+    if cfg.family in ("dense", "vlm", "moe"):
+        proj = (_dense_layer_proj_flops(cfg) if cfg.family != "moe"
+                else _moe_layer_proj_flops(cfg))
+        attn = 4 * cfg.n_heads * cfg.head_dim * S
+        flops = (proj + attn) * D * cfg.n_layers + 2 * cfg.d_model * cfg.vocab * D
+        kv_bytes = 2 * B * S * cfg.kv_heads * cfg.head_dim * BF16 * cfg.n_layers
+    elif cfg.family == "hybrid":
+        n_sb = cfg.n_layers // cfg.attn_every
+        di = cfg.expand * cfg.d_model
+        P = di // cfg.ssm_heads
+        mamba = _mamba_layer_flops(cfg, chunk=1)
+        shared = _dense_layer_proj_flops(cfg) + 4 * cfg.n_heads * cfg.head_dim * S
+        flops = (mamba * cfg.n_layers + shared * n_sb) * D \
+            + 2 * cfg.d_model * cfg.vocab * D
+        ssm_bytes = (cfg.n_layers * B * cfg.ssm_heads * P * cfg.ssm_state * FP32 * 2)
+        kv_bytes = 2 * B * S * cfg.kv_heads * cfg.head_dim * BF16 * n_sb + ssm_bytes
+    elif cfg.family == "xlstm":
+        n_sb = cfg.n_layers // cfg.slstm_every
+        m_per = cfg.slstm_every - 1
+        di = cfg.expand * cfg.d_model
+        hd = di // cfg.n_heads
+        flops = ((_mlstm_layer_flops(cfg, chunk=1) * m_per + _slstm_layer_flops(cfg))
+                 * n_sb) * D + 2 * cfg.d_model * cfg.vocab * D
+        kv_bytes = n_sb * m_per * B * cfg.n_heads * (hd + 1) * hd * FP32 * 2
+    elif cfg.family == "encdec":
+        proj = _dense_layer_proj_flops(cfg)
+        attn = 4 * cfg.n_heads * cfg.head_dim * S          # self on cache
+        cross = 4 * cfg.n_heads * cfg.head_dim * S         # cross on memory
+        flops = (2 * proj + attn + cross) * D * cfg.dec_layers \
+            + 2 * cfg.d_model * cfg.vocab * D
+        kv_bytes = (2 * B * S * cfg.kv_heads * cfg.head_dim * BF16 * cfg.dec_layers
+                    + B * S * cfg.d_model * BF16)
+    else:
+        raise ValueError(cfg.family)
+
+    hbm = wbytes + kv_bytes
+    return CostReport(flops, 2 * active_p * D, hbm, total_p, active_p,
+                      notes="decode is weight+cache bandwidth bound")

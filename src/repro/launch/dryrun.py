@@ -1,0 +1,400 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves, without real hardware:
+  - the sharding config is coherent (GSPMD partitions every op),
+  - the per-device memory fits (compiled.memory_analysis()),
+  - the collective schedule is sane (parsed from the partitioned HLO).
+
+Train shapes lower the HiFT per-group step (the paper's technique); a
+``--fpft`` flag lowers the standard FPFT step for comparison.  Decode
+shapes lower ``serve_step`` (one token against a seq_len KV cache);
+prefill shapes lower the prompt pass.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch internlm2-1.8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--fpft]
+Outputs one JSON per cell under experiments/dryrun/.
+"""
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+from functools import partial
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import SHAPES, ArchConfig, ShapeConfig
+from repro.configs.registry import (ARCH_IDS, cache_specs_struct, cell_supported,
+                                    get_config, input_specs)
+from repro.core.grouping import group_cut, make_groups, merge_params, split_params
+from repro.core.scheduler import LRSchedule
+from repro.dist.ctx import activation_sharding
+from repro.dist.shardings import (batch_shardings, cache_shardings,
+                                  opt_state_shardings, param_shardings)
+from repro.launch import costmodel
+from repro.launch.mesh import make_production_mesh
+from repro.models import get_family, unit_first_depth
+from repro.optim import make_optimizer
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+# TPU v5e constants (roofline)
+PEAK_FLOPS = 197e12       # bf16 per chip
+HBM_BW = 819e9            # bytes/s per chip
+ICI_BW = 50e9             # bytes/s per link
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _daxes(mesh):
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def parse_collectives(hlo: str) -> dict:
+    """Sum operand bytes of collective ops in partitioned HLO, tracking which
+    computation each op lives in (while-bodies execute per scan iteration —
+    the caller multiplies those by the trip count)."""
+    dtype_bytes = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+                   "s8": 1, "u8": 1, "pred": 1, "s64": 8, "u64": 8, "s16": 2,
+                   "u16": 2}
+    comp = "entry"
+    per_comp: dict[str, dict[str, float]] = {}
+    array_re = re.compile(r"(f64|f32|bf16|f16|s64|u64|s32|u32|s16|u16|s8|u8|pred)\[([0-9,]*)\]")
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        m = re.match(r"^(%?[\w\.\-]+)\s*(\([^)]*\))?\s*->", stripped)
+        if stripped.startswith(("ENTRY", "%")) and "{" in stripped and "->" in stripped:
+            toks = stripped.split()
+            name = toks[1] if toks[0] == "ENTRY" and len(toks) > 1 else toks[0]
+            comp = name.lstrip("%").split("(")[0].rstrip()
+            continue
+        for cname in _COLLECTIVES:
+            token = f" {cname}("
+            idx = stripped.find(token)
+            if idx < 0:
+                # fused variants like all-reduce-start
+                token = f" {cname}-start("
+                idx = stripped.find(token)
+                if idx < 0:
+                    continue
+            operands = stripped[idx + len(token):]
+            depth = 1
+            end = 0
+            for i, ch in enumerate(operands):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        end = i
+                        break
+            operands = operands[:end]
+            nbytes = 0.0
+            for dt, dims in array_re.findall(operands):
+                n = 1
+                for d in dims.split(","):
+                    if d:
+                        n *= int(d)
+                nbytes += n * dtype_bytes[dt]
+            if nbytes == 0:
+                # operand types not inline; fall back to result type
+                for dt, dims in array_re.findall(stripped[:idx]):
+                    n = 1
+                    for d in dims.split(","):
+                        if d:
+                            n *= int(d)
+                    nbytes += n * dtype_bytes[dt]
+            d = per_comp.setdefault(comp, {})
+            d[cname] = d.get(cname, 0.0) + nbytes
+            break
+    return per_comp
+
+
+def collective_bytes_total(per_comp: dict, layer_trip: int) -> tuple[float, dict]:
+    """Total collective bytes; while-body computations x layer_trip."""
+    total = 0.0
+    detail = {}
+    for comp, ops in per_comp.items():
+        mult = layer_trip if ("while" in comp or "body" in comp or
+                              "scan" in comp or "cond" in comp) else 1
+        for op, b in ops.items():
+            total += b * mult
+            detail[f"{comp}/{op}"] = {"bytes": b, "mult": mult}
+    return total, detail
+
+
+def _abstract_params(cfg: ArchConfig, dtype=jnp.bfloat16):
+    """Abstract param tree in the RESIDENT dtype.  Training cells use the
+    paper's Mixed^Hi policy: bf16 params resident, fp32 master + moments only
+    for the active group (inside its optimizer bundle)."""
+    from repro.common.pytree import tree_cast
+    model = get_family(cfg)
+
+    def build(key):
+        return tree_cast(model.init(cfg, key), dtype)
+
+    return jax.eval_shape(build, jax.random.PRNGKey(0))
+
+
+def lower_train_cell(cfg: ArchConfig, shape: ShapeConfig, mesh, fpft: bool = False):
+    """Build + lower + compile the HiFT (or FPFT) train step for a cell."""
+    model = get_family(cfg)
+    params_s = _abstract_params(cfg)
+    opt = make_optimizer("adamw")
+    batch_s = input_specs(cfg, shape)
+    pshard = param_shardings(params_s, mesh)
+    bshard = batch_shardings(batch_s, mesh)
+    lr_s = jax.ShapeDtypeStruct((), jnp.float32)
+    lr_shard = NamedSharding(mesh, P())
+
+    if fpft:
+        def step(params, opt_state, batch, lr):
+            def loss_of(p):
+                return model.loss_fn(cfg, p, batch, compute_dtype=jnp.bfloat16)
+            loss, grads = jax.value_and_grad(loss_of)(params)
+            new_params, new_state = opt.update(grads, opt_state, params, lr)
+            return new_params, new_state, loss
+
+        state_s = jax.eval_shape(opt.init, params_s)
+        sshard = opt_state_shardings(state_s, params_s, mesh)
+        fn = jax.jit(step, in_shardings=(pshard, sshard, bshard, lr_shard))
+        with mesh, activation_sharding(mesh, _daxes(mesh)):
+            lowered = fn.lower(params_s, state_s, batch_s, lr_s)
+        groups_meta = {"mode": "fpft"}
+    else:
+        # representative middle group, m=1 (the paper's default)
+        units = model.unit_spec(cfg)
+        groups = make_groups(units, 1)
+        gi = len(groups) // 2
+        group = groups[gi]
+        cut = group_cut(cfg, group, unit_first_depth)
+
+        n_micro = max(cfg.grad_accum, 1)
+
+        def step(active, frozen, bundle, batch, lr):
+            def loss_of(a, mb):
+                full = merge_params(a, frozen, group)
+                return model.loss_fn(cfg, full, mb, cut=cut,
+                                     compute_dtype=jnp.bfloat16)
+
+            if n_micro == 1:
+                loss, grads = jax.value_and_grad(loss_of)(active, batch)
+            else:
+                # gradient accumulation: activation peak shrinks by n_micro;
+                # the accumulated grads are only the ACTIVE group (tiny)
+                micro = jax.tree.map(
+                    lambda x: x.reshape((n_micro, x.shape[0] // n_micro) + x.shape[1:]),
+                    batch)
+
+                def mb_step(carry, mb):
+                    g_acc, l_acc = carry
+                    l, g = jax.value_and_grad(loss_of)(active, mb)
+                    return (jax.tree.map(jnp.add, g_acc, g), l_acc + l), None
+
+                zeros = jax.tree.map(
+                    lambda x: jnp.zeros(x.shape, jnp.float32), active)
+                (g_sum, l_sum), _ = jax.lax.scan(
+                    mb_step, (zeros, jnp.zeros((), jnp.float32)), micro)
+                grads = jax.tree.map(lambda g: g / n_micro, g_sum)
+                loss = l_sum / n_micro
+            # Mixed^Hi: fp32 master lives in the bundle, bf16 copy resident
+            from repro.common.pytree import tree_cast
+            new_master, new_state = opt.update(grads, bundle["opt"],
+                                               bundle["master"], lr)
+            new_active = tree_cast(new_master, jnp.bfloat16)
+            return new_active, {"opt": new_state, "master": new_master}, loss
+
+        active_s, frozen_s = jax.eval_shape(partial(split_params, group=group),
+                                            params_s)
+        master_s = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, jnp.float32), active_s)
+        bundle_s = {"opt": jax.eval_shape(opt.init, master_s),
+                    "master": master_s}
+        ashard = param_shardings(active_s, mesh)
+        fshard = param_shardings(frozen_s, mesh)
+        oshard = {"opt": opt_state_shardings(bundle_s["opt"], active_s, mesh),
+                  "master": param_shardings(master_s, mesh)}
+        fn = jax.jit(step, in_shardings=(ashard, fshard, oshard, bshard, lr_shard))
+        with mesh, activation_sharding(mesh, _daxes(mesh)):
+            lowered = fn.lower(active_s, frozen_s, bundle_s, batch_s, lr_s)
+        groups_meta = {"mode": "hift", "k": len(groups), "group": group.label(),
+                       "cut": cut}
+    return lowered, groups_meta
+
+
+def lower_serve_cell(cfg: ArchConfig, shape: ShapeConfig, mesh):
+    """Lower prefill or decode step."""
+    model = get_family(cfg)
+    params_s = _abstract_params(cfg)
+    pshard = param_shardings(params_s, mesh)
+    cache_s = cache_specs_struct(cfg, shape)
+    cshard = cache_shardings(cache_s, mesh)
+    batch_s = input_specs(cfg, shape)
+    bshard = batch_shardings(batch_s, mesh)
+
+    if shape.kind == "prefill":
+        def step(params, batch, cache):
+            return model.prefill(cfg, params, batch, cache,
+                                 compute_dtype=jnp.bfloat16)
+
+        fn = jax.jit(step, in_shardings=(pshard, bshard, cshard),
+                     out_shardings=(NamedSharding(mesh, P()), cshard))
+        with mesh, activation_sharding(mesh, _daxes(mesh)):
+            lowered = fn.lower(params_s, batch_s, cache_s)
+    else:
+        def step(params, cache, tokens):
+            return model.decode_step(cfg, params, cache, tokens,
+                                     compute_dtype=jnp.bfloat16)
+
+        fn = jax.jit(step, in_shardings=(pshard, cshard, bshard["tokens"]),
+                     out_shardings=(NamedSharding(mesh, P()), cshard),
+                     donate_argnums=(1,))
+        with mesh, activation_sharding(mesh, _daxes(mesh)):
+            lowered = fn.lower(params_s, cache_s, batch_s["tokens"])
+    return lowered, {"mode": shape.kind}
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool = False,
+             fpft: bool = False, save: bool = True) -> dict:
+    cfg = get_config(arch_id)
+    shape = SHAPES[shape_name]
+    ok, why = cell_supported(cfg, shape)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    cell = {"arch": cfg.name, "shape": shape.name, "mesh": mesh_name,
+            "kind": shape.kind}
+    if not ok:
+        cell.update(status="skipped", reason=why)
+        return _finish(cell, save)
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    t0 = time.time()
+    try:
+        if shape.kind == "train":
+            lowered, meta = lower_train_cell(cfg, shape, mesh, fpft=fpft)
+        else:
+            lowered, meta = lower_serve_cell(cfg, shape, mesh)
+        compiled = lowered.compile()
+    except Exception as e:
+        cell.update(status="error", error=f"{type(e).__name__}: {e}",
+                    traceback=traceback.format_exc()[-2000:])
+        return _finish(cell, save)
+
+    mem = compiled.memory_analysis()
+    ca = compiled.cost_analysis()
+    ca = ca if isinstance(ca, dict) else (ca[0] if ca else {})
+    hlo = compiled.as_text()
+    per_comp = parse_collectives(hlo)
+    layer_trip = cfg.n_layers
+    coll_bytes, coll_detail = collective_bytes_total(per_comp, layer_trip)
+
+    # analytic cost model
+    if shape.kind == "train":
+        cut = meta.get("cut") or 0
+        cost = costmodel.train_cost(cfg, shape, cut=cut, active_layers=1,
+                                    head_active=False)
+    else:
+        cost = costmodel.serve_cost(cfg, shape, shape.kind)
+
+    # roofline terms (seconds) — single-pod accounting per spec
+    compute_s = cost.flops / (n_chips * PEAK_FLOPS)
+    memory_s = cost.hbm_bytes / (n_chips * HBM_BW)
+    collective_s = coll_bytes / (n_chips * ICI_BW)
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+
+    per_dev_bytes = (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                     + mem.output_size_in_bytes - mem.alias_size_in_bytes)
+    cell.update(
+        status="ok", meta=meta, compile_s=round(time.time() - t0, 1),
+        n_chips=n_chips,
+        memory={
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "per_device_total_gb": per_dev_bytes / 2**30,
+            "fits_16gb_hbm": bool(per_dev_bytes < 16 * 2**30),
+        },
+        xla_cost_analysis={"flops": ca.get("flops", 0.0),
+                           "bytes_accessed": ca.get("bytes accessed", 0.0),
+                           "note": "scan bodies counted once by XLA"},
+        analytic={
+            "flops": cost.flops, "model_flops": cost.model_flops,
+            "useful_fraction": cost.model_flops / max(cost.flops, 1.0),
+            "hbm_bytes": cost.hbm_bytes, "n_params": cost.n_params,
+            "n_active_params": cost.n_active_params,
+        },
+        collectives={"total_bytes": coll_bytes, "detail": coll_detail},
+        roofline={**terms, "dominant": dominant,
+                  "bound_step_s": max(terms.values())},
+    )
+    return _finish(cell, save)
+
+
+def _finish(cell: dict, save: bool) -> dict:
+    if save:
+        OUT_DIR.mkdir(parents=True, exist_ok=True)
+        name = f"{cell['arch']}_{cell['shape']}_{cell['mesh']}.json".replace("/", "-")
+        (OUT_DIR / name).write_text(json.dumps(cell, indent=1, default=str))
+    status = cell["status"]
+    extra = ""
+    if status == "ok":
+        r = cell["roofline"]
+        extra = (f" dom={r['dominant'].split('_')[0]}"
+                 f" mem/dev={cell['memory']['per_device_total_gb']:.2f}GB"
+                 f" compile={cell['compile_s']}s")
+    elif status == "error":
+        extra = " " + cell["error"][:120]
+    elif status == "skipped":
+        extra = " " + cell["reason"][:60]
+    print(f"[{status:>7}] {cell['arch']:<24} {cell['shape']:<12} "
+          f"{cell['mesh']:<8}{extra}", flush=True)
+    return cell
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--fpft", action="store_true")
+    args = ap.parse_args()
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    cells = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for shape in SHAPES:
+                for mp in meshes:
+                    cells.append((arch, shape, mp))
+    else:
+        if not (args.arch and args.shape):
+            ap.error("need --arch and --shape, or --all")
+        for mp in meshes:
+            cells.append((args.arch, args.shape, mp))
+
+    results = [run_cell(a, s, multi_pod=mp, fpft=args.fpft) for a, s, mp in cells]
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"\n== dry-run: {n_ok} ok, {n_skip} skipped, {n_err} errors "
+          f"of {len(results)} cells ==")
+    return 0 if n_err == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,29 @@
+"""Production mesh builders.
+
+Single-pod: (data=16, model=16) = 256 chips (one TPU v5e pod slice).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the ``pod`` axis carries
+cross-pod data parallelism over DCI while ``data``/``model`` stay inside a
+pod on ICI.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state — the dry-run sets XLA_FLAGS before the first jax call.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """1-device mesh for CPU smoke tests/benches (keeps the same axis names)."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    """Axes that carry the batch dimension (pod folds into data)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

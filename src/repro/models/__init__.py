@@ -1,0 +1,39 @@
+"""Model-family registry: uniform API over all assigned architectures.
+
+Each family module exposes:
+    init(cfg, key) -> params
+    apply(cfg, params, batch, cut=None, compute_dtype=...) -> logits
+    loss_fn(cfg, params, batch, cut=None, compute_dtype=...) -> scalar
+    unit_spec(cfg) -> list[Unit]
+    init_cache / prefill / decode_step  (serving; encoder-only would omit)
+    unit_first_depth(cfg, unit) -> int  (optional; default below)
+"""
+from repro.models import transformer, moe, zamba2, xlstm, encdec
+from repro.models.base import Unit
+
+_FAMILIES = {
+    "dense": transformer,
+    "vlm": transformer,   # LM backbone + stub patch embeddings (cfg.vision_tokens)
+    "moe": moe,
+    "hybrid": zamba2,
+    "xlstm": xlstm,
+    "encdec": encdec,
+}
+
+
+def get_family(cfg):
+    return _FAMILIES[cfg.family]
+
+
+def default_unit_first_depth(cfg, unit: Unit) -> int:
+    if unit.key == "embed":
+        return 0
+    if unit.kind == "stacked":
+        return unit.index
+    return cfg.n_layers  # head
+
+
+def unit_first_depth(cfg, unit: Unit) -> int:
+    mod = get_family(cfg)
+    fn = getattr(mod, "unit_first_depth", None)
+    return fn(cfg, unit) if fn else default_unit_first_depth(cfg, unit)

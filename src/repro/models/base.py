@@ -1,0 +1,92 @@
+"""Model-family protocol + HiFT unit machinery.
+
+A *unit* is the paper's layering granularity: the embedding stack is the
+bottom unit, each transformer/SSM block is one unit, the head (+final norm)
+is the top unit.  HiFT groups are contiguous spans of units.
+
+Parameters use STACKED layers (leading dim = n_layers, scanned with
+jax.lax.scan) — the production-style representation that keeps HLO size
+independent of depth.  A unit therefore addresses either:
+  - a top-level dict key (dense unit, e.g. "embed"), or
+  - one index of a stacked segment (e.g. ("layers", 17)).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.ctx import constrain_layer_io
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Unit:
+    kind: str                 # "dense" | "stacked"
+    key: str                  # top-level param key ("embed", "layers", ...)
+    index: Optional[int] = None  # layer index within a stacked segment
+
+    def label(self) -> str:
+        return self.key if self.kind == "dense" else f"{self.key}[{self.index}]"
+
+
+def dense_unit(key: str) -> Unit:
+    return Unit("dense", key)
+
+
+def stacked_units(key: str, n: int) -> list[Unit]:
+    return [Unit("stacked", key, i) for i in range(n)]
+
+
+def scan_layers(step: Callable, layers: PyTree, h, cut: Optional[int] = None,
+                remat: bool = False, unroll: int = 1):
+    """Scan ``h`` through stacked ``layers``; optionally insert a
+    stop_gradient before layer index ``cut`` (the HiFT backward cut: no
+    cotangents flow below the active group -> the paper's residual-state
+    saving)."""
+    body = step
+    if remat:
+        body = jax.checkpoint(step)
+
+    def scan_step(carry, layer_params):
+        return constrain_layer_io(body(carry, layer_params)), None
+
+    def run(seg, carry):
+        if jax.tree.leaves(seg) and jax.tree.leaves(seg)[0].shape[0] > 0:
+            carry, _ = jax.lax.scan(scan_step, carry, seg, unroll=unroll)
+        return carry
+
+    if cut is None or cut <= 0:
+        return run(layers, h)
+    n = jax.tree.leaves(layers)[0].shape[0]
+    cut = min(cut, n)
+    pre = jax.tree.map(lambda x: x[:cut], layers)
+    post = jax.tree.map(lambda x: x[cut:], layers)
+    h = run(pre, h)
+    h = jax.lax.stop_gradient(h)
+    return run(post, h)
+
+
+def scan_layers_with_cache(step: Callable, layers: PyTree, cache: PyTree, h):
+    """Scan through stacked layers threading a per-layer cache (decode).
+
+    ``step(h, layer_params, layer_cache) -> (h, new_layer_cache)``;
+    cache leaves have leading dim = n_layers.
+    """
+    def scan_step(carry, xs):
+        layer_params, layer_cache = xs
+        h = carry
+        h, new_cache = step(h, layer_params, layer_cache)
+        return constrain_layer_io(h), new_cache
+
+    h, new_cache = jax.lax.scan(scan_step, h, (layers, cache))
+    return h, new_cache
+
+
+def init_stacked(init_one: Callable[[jax.Array], PyTree], key, n: int) -> PyTree:
+    """Initialize n layers and stack leaves along axis 0."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_one)(keys)

@@ -1,0 +1,259 @@
+"""Encoder-decoder transformer backbone (seamless-m4t-large-v2).
+
+Per the assignment the modality frontend is a STUB: the encoder consumes
+precomputed frame embeddings ``src_embeds`` (B, S_enc, d_model) supplied by
+``input_specs``; the text decoder is a standard causal transformer with
+cross-attention.  enc/dec are 24 layers each (the released speech-to-text
+stack), GELU MLPs, layernorm.
+
+HiFT unit order (bottom→top): [embed] + enc[0..E-1] + dec[0..D-1] + [head].
+A cut inside the decoder freezes the whole encoder (stop_gradient on the
+encoder memory).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models.base import (Unit, dense_unit, init_stacked, scan_layers,
+                               scan_layers_with_cache, stacked_units)
+
+from repro.dist.ctx import constrain_layer_io
+
+PyTree = Any
+
+
+def init_enc_layer(cfg: ArchConfig):
+    def one(key):
+        k1, k2 = jax.random.split(key)
+        return {
+            "ln1": L.layernorm_init(cfg.d_model),
+            "attn": L.gqa_attention_init(k1, cfg.d_model, cfg.n_heads,
+                                         cfg.kv_heads, cfg.head_dim),
+            "ln2": L.layernorm_init(cfg.d_model),
+            "mlp": L.gelu_mlp_init(k2, cfg.d_model, cfg.d_ff),
+        }
+    return one
+
+
+def init_dec_layer(cfg: ArchConfig):
+    def one(key):
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "ln1": L.layernorm_init(cfg.d_model),
+            "self_attn": L.gqa_attention_init(k1, cfg.d_model, cfg.n_heads,
+                                              cfg.kv_heads, cfg.head_dim),
+            "ln_x": L.layernorm_init(cfg.d_model),
+            "cross_attn": L.gqa_attention_init(k2, cfg.d_model, cfg.n_heads,
+                                               cfg.n_heads, cfg.head_dim),
+            "ln2": L.layernorm_init(cfg.d_model),
+            "mlp": L.gelu_mlp_init(k3, cfg.d_model, cfg.d_ff),
+        }
+    return one
+
+
+def init(cfg: ArchConfig, key) -> PyTree:
+    ks = jax.random.split(key, 5)
+    return {
+        "embed": {
+            "src_proj": L.dense_init(ks[0], cfg.d_model, cfg.d_model),
+            "tok": L.embed_init(ks[1], cfg.vocab_padded, cfg.d_model),
+        },
+        "enc": init_stacked(init_enc_layer(cfg), ks[2], cfg.enc_layers),
+        "dec": init_stacked(init_dec_layer(cfg), ks[3], cfg.dec_layers),
+        "head": {
+            "final_norm": L.layernorm_init(cfg.d_model),
+            "w": L.dense_init(ks[4], cfg.d_model, cfg.vocab_padded),
+        },
+    }
+
+
+def unit_spec(cfg: ArchConfig) -> list[Unit]:
+    return ([dense_unit("embed")] + stacked_units("enc", cfg.enc_layers)
+            + stacked_units("dec", cfg.dec_layers) + [dense_unit("head")])
+
+
+def unit_first_depth(cfg: ArchConfig, unit: Unit) -> int:
+    if unit.key == "embed":
+        return 0
+    if unit.key == "enc":
+        return unit.index
+    if unit.key == "dec":
+        return cfg.enc_layers + unit.index
+    return cfg.enc_layers + cfg.dec_layers  # head
+
+
+def _bidir_attention(p, x, cfg, cos, sin):
+    """Non-causal encoder self-attention (full, sinusoidal-free with rope)."""
+    b, s, _ = x.shape
+    hd = cfg.head_dim
+    q = (x @ p["wq"].astype(x.dtype)).reshape(b, s, cfg.n_heads, hd)
+    k = (x @ p["wk"].astype(x.dtype)).reshape(b, s, cfg.kv_heads, hd)
+    v = (x @ p["wv"].astype(x.dtype)).reshape(b, s, cfg.kv_heads, hd)
+    q = L.apply_rope(q, cos, sin)
+    k = L.apply_rope(k, cos, sin)
+    n_rep = cfg.n_heads // cfg.kv_heads
+    k = L._repeat_kv(k, n_rep)
+    v = L._repeat_kv(v, n_rep)
+    o = L.chunked_attention(q, k, v, cfg.block_q, cfg.block_k, causal=False)
+    return o.reshape(b, s, cfg.n_heads * hd) @ p["wo"].astype(x.dtype)
+
+
+def _cross_attention(p, x, memory, cfg):
+    b, s, _ = x.shape
+    sm = memory.shape[1]
+    hd = cfg.head_dim
+    q = (x @ p["wq"].astype(x.dtype)).reshape(b, s, cfg.n_heads, hd)
+    k = (memory @ p["wk"].astype(x.dtype)).reshape(b, sm, cfg.n_heads, hd)
+    v = (memory @ p["wv"].astype(x.dtype)).reshape(b, sm, cfg.n_heads, hd)
+    if s == 1:
+        # decode: single query against the full encoder memory
+        scale = 1.0 / math.sqrt(hd)
+        sc = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+        probs = jax.nn.softmax(sc, axis=-1).astype(x.dtype)
+        o = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+    else:
+        o = L.chunked_attention(q, k, v, cfg.block_q, cfg.block_k, causal=False)
+    return o.reshape(b, s, cfg.n_heads * hd) @ p["wo"].astype(x.dtype)
+
+
+def encode(cfg: ArchConfig, params: PyTree, src_embeds, cut: Optional[int] = None,
+           compute_dtype=jnp.bfloat16):
+    h = src_embeds.astype(compute_dtype) @ params["embed"]["src_proj"].astype(compute_dtype)
+    h = constrain_layer_io(h)
+    cos, sin = L.rope_frequencies(cfg.head_dim, h.shape[1], cfg.rope_theta)
+
+    def step(h, p):
+        h = h + _bidir_attention(p["attn"], L.layernorm(p["ln1"], h), cfg, cos, sin)
+        h = h + L.gelu_mlp(p["mlp"], L.layernorm(p["ln2"], h))
+        return h
+
+    if cut is not None:
+        h = jax.lax.stop_gradient(h)
+    return scan_layers(step, params["enc"], h, cut=cut, remat=cfg.remat == "layer")
+
+
+def apply(cfg: ArchConfig, params: PyTree, batch, cut: Optional[int] = None,
+          compute_dtype=jnp.bfloat16, return_hidden: bool = False):
+    """Training forward.  batch: {src_embeds (B,Se,d), tokens (B,Sd), labels}."""
+    enc_cut = None
+    dec_cut = None
+    if cut is not None:
+        if cut <= cfg.enc_layers:
+            enc_cut = cut
+        else:
+            enc_cut = cfg.enc_layers  # fully frozen encoder
+            dec_cut = cut - cfg.enc_layers
+    memory = encode(cfg, params, batch["src_embeds"], cut=enc_cut,
+                    compute_dtype=compute_dtype)
+    if cut is not None and cut >= cfg.enc_layers:
+        memory = jax.lax.stop_gradient(memory)
+
+    h = constrain_layer_io(params["embed"]["tok"][batch["tokens"]].astype(compute_dtype))
+    if cut is not None:
+        h = jax.lax.stop_gradient(h)
+    cos, sin = L.rope_frequencies(cfg.head_dim, h.shape[1], cfg.rope_theta)
+
+    def step(h, p):
+        h = h + L.gqa_attention(p["self_attn"], L.layernorm(p["ln1"], h), cfg,
+                                cos, sin, impl=cfg.attention_impl,
+                                balanced=cfg.attention_balanced)
+        h = h + _cross_attention(p["cross_attn"], L.layernorm(p["ln_x"], h), memory, cfg)
+        h = h + L.gelu_mlp(p["mlp"], L.layernorm(p["ln2"], h))
+        return h
+
+    h = scan_layers(step, params["dec"], h, cut=dec_cut, remat=cfg.remat == "layer")
+    h = L.layernorm(params["head"]["final_norm"], h)
+    if return_hidden:
+        return h
+    return (h @ params["head"]["w"].astype(h.dtype)).astype(jnp.float32)
+
+
+def loss_fn(cfg: ArchConfig, params: PyTree, batch, cut: Optional[int] = None,
+            compute_dtype=jnp.bfloat16):
+    from repro.models.losses import chunked_next_token_xent
+    h = apply(cfg, params, batch, cut=cut, compute_dtype=compute_dtype,
+              return_hidden=True)
+    return chunked_next_token_xent(h, params["head"]["w"], batch["labels"],
+                                   chunk=cfg.ce_chunk or None)
+
+
+# ---------------------------------------------------------------- serving
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, enc_len: int,
+               dtype=jnp.bfloat16):
+    hd = cfg.head_dim
+    return {
+        "k": jnp.zeros((cfg.dec_layers, batch, max_len, cfg.kv_heads, hd), dtype),
+        "v": jnp.zeros((cfg.dec_layers, batch, max_len, cfg.kv_heads, hd), dtype),
+        "memory": jnp.zeros((batch, enc_len, cfg.d_model), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(cfg: ArchConfig, params: PyTree, batch, cache: PyTree,
+            compute_dtype=jnp.bfloat16):
+    """Encode source + run decoder prompt, filling self-attn KV cache."""
+    memory = encode(cfg, params, batch["src_embeds"], compute_dtype=compute_dtype)
+    h = params["embed"]["tok"][batch["tokens"]].astype(compute_dtype)
+    b, s, _ = h.shape
+    cos, sin = L.rope_frequencies(cfg.head_dim, s, cfg.rope_theta)
+    cache_dtype = cache["k"].dtype
+
+    def scan_step(h, xs):
+        p, _ = xs
+        hn = L.layernorm(p["ln1"], h)
+        q = (hn @ p["self_attn"]["wq"].astype(h.dtype)).reshape(b, s, cfg.n_heads, cfg.head_dim)
+        k = (hn @ p["self_attn"]["wk"].astype(h.dtype)).reshape(b, s, cfg.kv_heads, cfg.head_dim)
+        v = (hn @ p["self_attn"]["wv"].astype(h.dtype)).reshape(b, s, cfg.kv_heads, cfg.head_dim)
+        q = L.apply_rope(q, cos, sin)
+        k = L.apply_rope(k, cos, sin)
+        entry = {"k": k.astype(cache_dtype), "v": v.astype(cache_dtype)}
+        n_rep = cfg.n_heads // cfg.kv_heads
+        o = L.chunked_causal_attention(q, L._repeat_kv(k, n_rep), L._repeat_kv(v, n_rep),
+                                       cfg.block_q, cfg.block_k)
+        h = h + o.reshape(b, s, -1) @ p["self_attn"]["wo"].astype(h.dtype)
+        h = h + _cross_attention(p["cross_attn"], L.layernorm(p["ln_x"], h), memory, cfg)
+        h = h + L.gelu_mlp(p["mlp"], L.layernorm(p["ln2"], h))
+        return h, entry
+
+    h, entries = jax.lax.scan(scan_step, h, (params["dec"], jnp.arange(cfg.dec_layers)))
+    hl = L.layernorm(params["head"]["final_norm"], h[:, -1:])
+    logits = (hl @ params["head"]["w"].astype(hl.dtype)).astype(jnp.float32)
+    new_cache = {
+        "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], entries["k"], 0, axis=2),
+        "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], entries["v"], 0, axis=2),
+        "memory": memory.astype(cache["memory"].dtype),
+        "pos": jnp.asarray(s, jnp.int32),
+    }
+    return logits, new_cache
+
+
+def decode_step(cfg: ArchConfig, params: PyTree, cache: PyTree, tokens,
+                compute_dtype=jnp.bfloat16):
+    h = params["embed"]["tok"][tokens].astype(compute_dtype)
+    memory = cache["memory"].astype(compute_dtype)
+    max_len = cache["k"].shape[2]
+    cos, sin = L.rope_frequencies(cfg.head_dim, max_len, cfg.rope_theta)
+    pos = cache["pos"]
+
+    def step(h, p, layer_cache):
+        hn = L.layernorm(p["ln1"], h)
+        o, ck, cv = L.gqa_decode_attention(p["self_attn"], hn, cfg, cos, sin,
+                                           layer_cache["k"], layer_cache["v"], pos)
+        h = h + o
+        h = h + _cross_attention(p["cross_attn"], L.layernorm(p["ln_x"], h), memory, cfg)
+        h = h + L.gelu_mlp(p["mlp"], L.layernorm(p["ln2"], h))
+        return h, {"k": ck, "v": cv}
+
+    h, new_kv = scan_layers_with_cache(step, params["dec"],
+                                       {"k": cache["k"], "v": cache["v"]}, h)
+    h = L.layernorm(params["head"]["final_norm"], h)
+    logits = (h @ params["head"]["w"].astype(h.dtype)).astype(jnp.float32)
+    return logits, {"k": new_kv["k"], "v": new_kv["v"], "memory": cache["memory"],
+                    "pos": pos + 1}

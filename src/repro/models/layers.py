@@ -1,0 +1,367 @@
+"""Shared neural-net layers (pure JAX, no flax).
+
+Conventions:
+- params are nested dicts of jnp arrays
+- activations: (B, S, D); attention heads: (B, S, H, hd)
+- init functions take an explicit PRNG key and return param subtrees
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------- init utils
+
+def dense_init(key, in_dim: int, out_dim: int, scale: float | None = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(in_dim)
+    return jax.random.normal(key, (in_dim, out_dim), jnp.float32) * scale
+
+
+def embed_init(key, vocab: int, dim: int):
+    return jax.random.normal(key, (vocab, dim), jnp.float32) * 0.02
+
+
+# --------------------------------------------------------------------- norms
+
+def rmsnorm_init(dim: int):
+    return {"scale": jnp.ones((dim,), jnp.float32)}
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps) * p["scale"]
+    return out.astype(x.dtype)
+
+
+def layernorm_init(dim: int):
+    return {"scale": jnp.ones((dim,), jnp.float32), "bias": jnp.zeros((dim,), jnp.float32)}
+
+
+def layernorm(p, x, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------- RoPE
+
+def rope_frequencies(head_dim: int, max_len: int, theta: float = 10000.0):
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+    t = jnp.arange(max_len, dtype=jnp.float32)
+    freqs = jnp.outer(t, inv)  # (S, hd/2)
+    return jnp.cos(freqs), jnp.sin(freqs)
+
+
+def apply_rope(x, cos, sin, positions=None):
+    """x: (B, S, H, hd); cos/sin: (max_len, hd/2); positions: (B, S) or None."""
+    if positions is None:
+        c = cos[: x.shape[1]][None, :, None, :]
+        s = sin[: x.shape[1]][None, :, None, :]
+    else:
+        c = cos[positions][:, :, None, :]
+        s = sin[positions][:, :, None, :]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c = c.astype(x.dtype)
+    s = s.astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+# ----------------------------------------------------------------- attention
+
+def gqa_attention_init(key, d_model: int, n_heads: int, kv_heads: int,
+                       head_dim: int | None = None, qkv_bias: bool = False):
+    hd = head_dim or d_model // n_heads
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(k1, d_model, n_heads * hd),
+        "wk": dense_init(k2, d_model, kv_heads * hd),
+        "wv": dense_init(k3, d_model, kv_heads * hd),
+        "wo": dense_init(k4, n_heads * hd, d_model),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((kv_heads * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((kv_heads * hd,), jnp.float32)
+    return p
+
+
+def _repeat_kv(k, n_rep: int):
+    """(B, S, KV, hd) -> (B, S, KV*n_rep, hd) by head repetition (GQA)."""
+    if n_rep == 1:
+        return k
+    b, s, kv, hd = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, kv, n_rep, hd)).reshape(b, s, kv * n_rep, hd)
+
+
+def full_causal_attention(q, k, v):
+    """Reference O(S^2)-memory attention. q: (B,S,H,hd), k/v: (B,S,H,hd)."""
+    b, s, h, hd = q.shape
+    scale = 1.0 / math.sqrt(hd)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def chunked_attention(q, k, v, block_q: int = 512, block_k: int = 512,
+                      causal: bool = True, balanced: bool = False):
+    """Non-causal variant: same online-softmax block scan without masking
+    (encoder self-attention at 32k frames must not materialize S^2)."""
+    if causal:
+        return chunked_causal_attention(q, k, v, block_q, block_k, balanced)
+    b, s, h, hd = q.shape
+    sk = k.shape[1]               # kv length may differ (cross-attention)
+    bq = next(c for c in range(min(block_q, s), 0, -1) if s % c == 0)
+    nq = s // bq
+    scale = 1.0 / math.sqrt(hd)
+    bk = next(c for c in range(min(block_k, sk), 0, -1) if sk % c == 0)
+    nk = sk // bk
+    qb = q.reshape(b, nq, bq, h, hd)
+    kb = k.reshape(b, nk, bk, h, hd)
+    vb = v.reshape(b, nk, bk, h, hd)
+
+    @jax.checkpoint
+    def per_q(qi):
+        q_block = jax.lax.dynamic_index_in_dim(qb, qi, axis=1, keepdims=False)
+
+        def step(carry, kj):
+            m, l, acc = carry
+            k_block = jax.lax.dynamic_index_in_dim(kb, kj, axis=1, keepdims=False)
+            v_block = jax.lax.dynamic_index_in_dim(vb, kj, axis=1, keepdims=False)
+            sc = jnp.einsum("bqhd,bkhd->bhqk", q_block, k_block).astype(jnp.float32) * scale
+            m_new = jnp.maximum(m, sc.max(axis=-1))
+            p = jnp.exp(sc - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p.astype(q.dtype), v_block).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        carry = (jnp.full((b, h, bq), -1e30, jnp.float32),
+                 jnp.zeros((b, h, bq), jnp.float32),
+                 jnp.zeros((b, h, bq, hd), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(step, carry, jnp.arange(nk))
+        return (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+
+    out = jax.lax.map(per_q, jnp.arange(nq))
+    out = jnp.moveaxis(out, 0, 2).reshape(b, h, s, hd)
+    return jnp.swapaxes(out, 1, 2).reshape(b, s, h, hd)
+
+
+def chunked_causal_attention(q, k, v, block_q: int = 512, block_k: int = 512,
+                             balanced: bool = False):
+    """Flash-style online-softmax attention in pure jnp.
+
+    Memory is O(block_q * block_k) per step instead of O(S^2); this is the
+    default train/prefill path (lowers on any backend; the Pallas kernel in
+    kernels/flash_attention.py is the TPU-target twin of this math).
+
+    ``balanced=False`` (baseline): every q block scans ALL kv blocks with a
+    causal mask — 2x the useful FLOPs.  ``balanced=True`` (hillclimbed):
+    q blocks are processed in complementary pairs (i, n-1-i) so each pair
+    scans exactly n+1 kv blocks — the causal-load-balancing schedule.
+    """
+    b, s, h, hd = q.shape
+    nq = max(1, s // block_q)
+    nk = max(1, s // block_k)
+    block_q = s // nq
+    block_k = s // nk
+    scale = 1.0 / math.sqrt(hd)
+
+    qb = q.reshape(b, nq, block_q, h, hd)
+    kb = k.reshape(b, nk, block_k, h, hd)
+    vb = v.reshape(b, nk, block_k, h, hd)
+
+    q_pos_base = jnp.arange(block_q)
+    k_pos_base = jnp.arange(block_k)
+
+    def block_attn(qi_idx, q_block, carry, kj_idx):
+        """One (q_block, kv_block) online-softmax update."""
+        m, l, acc = carry
+        k_block = jax.lax.dynamic_index_in_dim(kb, kj_idx, axis=1, keepdims=False)
+        v_block = jax.lax.dynamic_index_in_dim(vb, kj_idx, axis=1, keepdims=False)
+        sc = jnp.einsum("bqhd,bkhd->bhqk", q_block, k_block).astype(jnp.float32) * scale
+        q_pos = qi_idx * block_q + q_pos_base
+        k_pos = kj_idx * block_k + k_pos_base
+        causal = q_pos[:, None] >= k_pos[None, :]
+        sc = jnp.where(causal[None, None], sc, -1e30)
+        m_new = jnp.maximum(m, sc.max(axis=-1))
+        p = jnp.exp(sc - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p.astype(q.dtype), v_block).astype(jnp.float32)
+        return m_new, l_new, acc_new
+
+    def init_carry():
+        return (jnp.full((b, h, block_q), -1e30, jnp.float32),
+                jnp.zeros((b, h, block_q), jnp.float32),
+                jnp.zeros((b, h, block_q, hd), jnp.float32))
+
+    def finalize(carry):
+        m, l, acc = carry
+        return (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+
+    if not balanced:
+        # jax.checkpoint = flash-attention memory behaviour: block score
+        # matrices are REcomputed in the backward instead of saved (without
+        # this the scan saves O(S^2) residuals per layer — terabytes at 4k).
+        @jax.checkpoint
+        def per_q(qi_idx):
+            q_block = jax.lax.dynamic_index_in_dim(qb, qi_idx, axis=1, keepdims=False)
+
+            def step(carry, kj):
+                return block_attn(qi_idx, q_block, carry, kj), None
+
+            carry, _ = jax.lax.scan(step, init_carry(), jnp.arange(nk))
+            return finalize(carry)  # (B, H, block_q, hd)
+
+        out = jax.lax.map(per_q, jnp.arange(nq))  # (nq, B, H, bq, hd)
+        out = jnp.moveaxis(out, 0, 2).reshape(b, h, s, hd)
+        return jnp.swapaxes(out, 1, 2).reshape(b, s, h, hd)
+
+    # Balanced causal schedule: pair q block i with q block n-1-i.  The pair
+    # needs (i+1) + (n-i) = n+1 kv blocks total, so a fixed-length scan of
+    # n+1 steps does zero wasted block-matmuls (vs 2x waste above).
+    assert nq == nk, "balanced schedule expects equal q/kv block counts"
+    n = nq
+    npairs = (n + 1) // 2
+
+    @jax.checkpoint
+    def per_pair(pair_idx):
+        lo = pair_idx
+        hi = n - 1 - pair_idx
+        q_lo = jax.lax.dynamic_index_in_dim(qb, lo, axis=1, keepdims=False)
+        q_hi = jax.lax.dynamic_index_in_dim(qb, hi, axis=1, keepdims=False)
+
+        def step(carry, j):
+            c_lo, c_hi = carry
+            # steps 0..lo serve the low q block (kv block j);
+            # steps lo+1..n serve the high q block (kv block j-lo-1).
+            serves_lo = j <= lo
+            qi = jnp.where(serves_lo, lo, hi)
+            kj = jnp.where(serves_lo, j, j - lo - 1)
+            q_block = jnp.where(serves_lo, q_lo, q_hi)
+            new = block_attn(qi, q_block, jax.tree.map(
+                lambda a, b_: jnp.where(serves_lo, a, b_), c_lo, c_hi), kj)
+            c_lo = jax.tree.map(lambda old, nw: jnp.where(serves_lo, nw, old), c_lo, new)
+            c_hi = jax.tree.map(lambda old, nw: jnp.where(serves_lo, old, nw), c_hi, new)
+            return (c_lo, c_hi), None
+
+        (c_lo, c_hi), _ = jax.lax.scan(step, (init_carry(), init_carry()),
+                                       jnp.arange(n + 1))
+        return finalize(c_lo), finalize(c_hi)
+
+    out_lo, out_hi = jax.lax.map(per_pair, jnp.arange(npairs))
+    # stitch pairs back: out[i] = out_lo[i]; out[n-1-i] = out_hi[i]
+    idx = jnp.concatenate([jnp.arange(npairs), n - 1 - jnp.arange(npairs)])
+    both = jnp.concatenate([out_lo, out_hi], axis=0)  # (2*npairs, B, H, bq, hd)
+    order = jnp.argsort(idx)
+    out = both[order][:n]  # drop duplicate middle block when n odd
+    out = jnp.moveaxis(out, 0, 2).reshape(b, h, s, hd)
+    return jnp.swapaxes(out, 1, 2).reshape(b, s, h, hd)
+
+
+def gqa_attention(p, x, cfg, cos, sin, impl: str = "chunked",
+                  balanced: bool = False):
+    """Causal self-attention with grouped-query KV heads."""
+    b, s, d = x.shape
+    hd = cfg.head_dim
+    q = x @ p["wq"].astype(x.dtype)
+    k = x @ p["wk"].astype(x.dtype)
+    v = x @ p["wv"].astype(x.dtype)
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = q.reshape(b, s, cfg.n_heads, hd)
+    k = k.reshape(b, s, cfg.kv_heads, hd)
+    v = v.reshape(b, s, cfg.kv_heads, hd)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    n_rep = cfg.n_heads // cfg.kv_heads
+    k = _repeat_kv(k, n_rep)
+    v = _repeat_kv(v, n_rep)
+    if impl == "full":
+        o = full_causal_attention(q, k, v)
+    elif impl == "pallas":
+        from repro.kernels.ops import flash_attention
+        o = flash_attention(q, k, v, causal=True)
+    else:
+        o = chunked_causal_attention(q, k, v, balanced=balanced)
+    return o.reshape(b, s, cfg.n_heads * hd) @ p["wo"].astype(x.dtype)
+
+
+def gqa_decode_attention(p, x, cfg, cos, sin, cache_k, cache_v, position):
+    """Single-token decode: x (B, 1, D); cache_k/v (B, max_len, KV, hd).
+
+    Returns (out, new_cache_k, new_cache_v).  position: scalar int32 index.
+    """
+    b, _, d = x.shape
+    hd = cfg.head_dim
+    q = x @ p["wq"].astype(x.dtype)
+    k = x @ p["wk"].astype(x.dtype)
+    v = x @ p["wv"].astype(x.dtype)
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = q.reshape(b, 1, cfg.n_heads, hd)
+    k = k.reshape(b, 1, cfg.kv_heads, hd)
+    v = v.reshape(b, 1, cfg.kv_heads, hd)
+    pos = jnp.full((b, 1), position, jnp.int32)
+    q = apply_rope(q, cos, sin, pos)
+    k = apply_rope(k, cos, sin, pos)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), position, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), position, axis=1)
+    n_rep = cfg.n_heads // cfg.kv_heads
+    kk = _repeat_kv(cache_k.astype(x.dtype), n_rep)
+    vv = _repeat_kv(cache_v.astype(x.dtype), n_rep)
+    scale = 1.0 / math.sqrt(hd)
+    sc = jnp.einsum("bqhd,bkhd->bhqk", q, kk).astype(jnp.float32) * scale
+    valid = (jnp.arange(cache_k.shape[1]) <= position)[None, None, None, :]
+    sc = jnp.where(valid, sc, -1e30)
+    probs = jax.nn.softmax(sc, axis=-1).astype(x.dtype)
+    o = jnp.einsum("bhqk,bkhd->bqhd", probs, vv)
+    o = o.reshape(b, 1, cfg.n_heads * hd) @ p["wo"].astype(x.dtype)
+    return o, cache_k, cache_v
+
+
+# ----------------------------------------------------------------------- MLP
+
+def swiglu_init(key, d_model: int, d_ff: int):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d_model, d_ff),
+        "w_up": dense_init(k2, d_model, d_ff),
+        "w_down": dense_init(k3, d_ff, d_model),
+    }
+
+
+def swiglu(p, x):
+    g = jax.nn.silu(x @ p["w_gate"].astype(x.dtype))
+    u = x @ p["w_up"].astype(x.dtype)
+    return (g * u) @ p["w_down"].astype(x.dtype)
+
+
+def gelu_mlp_init(key, d_model: int, d_ff: int):
+    k1, k2 = jax.random.split(key, 2)
+    return {
+        "w_up": dense_init(k1, d_model, d_ff),
+        "b_up": jnp.zeros((d_ff,), jnp.float32),
+        "w_down": dense_init(k2, d_ff, d_model),
+        "b_down": jnp.zeros((d_model,), jnp.float32),
+    }
+
+
+def gelu_mlp(p, x):
+    h = jax.nn.gelu(x @ p["w_up"].astype(x.dtype) + p["b_up"].astype(x.dtype))
+    return h @ p["w_down"].astype(x.dtype) + p["b_down"].astype(x.dtype)

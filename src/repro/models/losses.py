@@ -1,0 +1,72 @@
+"""Cross-entropy losses.
+
+``chunked_next_token_xent`` never materializes the full (B, S, V) logits:
+the sequence is processed in blocks, each block's logits are computed,
+reduced to (logsumexp, gold-logit) scalars-per-token, and the block is
+rematerialized in the backward (jax.checkpoint).  Peak logits memory drops
+from O(B*S*V) to O(B*chunk*V) — the difference between a 2.5 TB/step and a
+few-GB/step temp footprint at vocab 152k, batch 256, seq 4k.
+
+The gold logit uses a one-hot einsum (NOT take_along_axis): a contraction
+over the vocab dim keeps V sharded over the `model` mesh axis (partial sums
++ psum) instead of forcing GSPMD to all-gather the vocab dimension.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.ctx import constrain_layer_io
+
+
+def _block_xent(h_blk, w_head, tgt_blk):
+    """h_blk: (B, T, D); w_head: (D, V); tgt_blk: (B, T) (may contain -1).
+    Returns (nll (B, T) fp32, mask (B, T) fp32)."""
+    logits = (h_blk @ w_head.astype(h_blk.dtype)).astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(jnp.maximum(tgt_blk, 0), logits.shape[-1],
+                            dtype=logits.dtype)
+    gold = jnp.einsum("btv,btv->bt", logits, onehot)
+    mask = (tgt_blk >= 0).astype(jnp.float32)
+    return (logz - gold) * mask, mask
+
+
+def chunked_next_token_xent(h, w_head, labels, chunk: Optional[int] = 512):
+    """Next-token CE: position t predicts labels[:, t+1].
+
+    h: (B, S, D) final hidden states (post final-norm); labels: (B, S).
+    Targets are labels shifted left with a -1 (ignore) pad, keeping S intact
+    so the block count divides evenly.
+    """
+    b, s, d = h.shape
+    tgt = jnp.concatenate(
+        [labels[:, 1:], jnp.full((b, 1), -1, labels.dtype)], axis=1)
+    if chunk and s % chunk != 0:
+        # largest divisor of s not exceeding the requested chunk (a silent
+        # fall-through to the naive path would materialize (B,S,V) fp32)
+        chunk = next((c for c in range(min(chunk, s), 0, -1) if s % c == 0), None)
+    if not chunk or s <= chunk:
+        nll, mask = _block_xent(h, w_head, tgt)
+        return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+
+    nblk = s // chunk
+    hb = h.reshape(b, nblk, chunk, d)
+    tb = tgt.reshape(b, nblk, chunk)
+
+    @jax.checkpoint
+    def block(w, hB, tB):
+        nll, mask = _block_xent(hB, w, tB)
+        return jnp.sum(nll), jnp.sum(mask)
+
+    def scan_step(carry, xs):
+        tot, cnt = carry
+        hB, tB = xs
+        nll, m = block(w_head, constrain_layer_io(hB), tB)
+        return (tot + nll, cnt + m), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        scan_step, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (jnp.moveaxis(hb, 1, 0), jnp.moveaxis(tb, 1, 0)))
+    return tot / jnp.maximum(cnt, 1.0)

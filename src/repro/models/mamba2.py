@@ -1,0 +1,213 @@
+"""Mamba2 (SSD) block in pure JAX — chunked selective-state-space scan.
+
+Recurrence per head (state S = d_state, head dim P):
+    h_t = a_t * h_{t-1} + dt_t * B_t (outer) x_t        a_t = exp(dt_t * A)
+    y_t = C_t . h_t + D * x_t
+computed chunkwise: intra-chunk via a masked attention-like einsum, inter-
+chunk via a scan over chunk states (the SSD duality).  The same math also
+backs the Pallas kernel in kernels/ssm_scan.py (ref oracle shares this).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+
+PyTree = Any
+
+
+def d_inner(cfg: ArchConfig) -> int:
+    return cfg.expand * cfg.d_model
+
+
+def mamba2_init(key, cfg: ArchConfig):
+    di = d_inner(cfg)
+    H = cfg.ssm_heads
+    S = cfg.ssm_state
+    conv_ch = di + 2 * S  # x, B, C go through the depthwise conv
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": L.dense_init(ks[0], cfg.d_model, 2 * di + 2 * S + H),
+        "conv_w": jax.random.normal(ks[1], (cfg.conv_width, conv_ch), jnp.float32) * 0.1,
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": L.rmsnorm_init(di),
+        "out_proj": L.dense_init(ks[2], di, cfg.d_model),
+    }
+
+
+def _depthwise_conv(x, w, b, state=None):
+    """Causal depthwise conv1d.  x: (B, S, C); w: (W, C).
+
+    If ``state`` (B, W-1, C) is given (decode), uses it as left context and
+    returns (y, new_state)."""
+    W = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+        xp = jnp.concatenate([pad, x], axis=1)
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    # sum_w x[t - (W-1) + w] * w[w]
+    y = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype) for i in range(W))
+    y = y + b.astype(x.dtype)
+    new_state = xp[:, -(W - 1):] if W > 1 else None
+    return y, new_state
+
+
+def _segsum(a_log):
+    """a_log: (..., T).  Returns (..., T, T) with sum of a_log over (j, i]
+    for i >= j, -inf above diagonal."""
+    T = a_log.shape[-1]
+    cum = jnp.cumsum(a_log, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]  # sum over (j, i]
+    mask = jnp.tril(jnp.ones((T, T), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def gated_chunked_scan(x_scaled, a_log, B, C, chunk: int = 128, h0=None):
+    """Chunked linear recurrence  h_t = exp(a_log_t) h_{t-1} + B_t (x) x_t,
+    y_t = C_t . h_t  — the shared core of Mamba2 SSD and mLSTM.
+
+    x_scaled: (Bt, S, H, P)  inputs already scaled (dt*x for SSD, i_t*v for mLSTM)
+    a_log:    (Bt, S, H)     log decay per head per step
+    B, C:     (Bt, S, N)
+    Returns (y (Bt,S,H,P), final_state (Bt,H,P,N))."""
+    Bt, S, H, P = x_scaled.shape
+    N = B.shape[-1]
+    nc = max(1, S // chunk)
+    Lc = S // nc
+    x = x_scaled
+
+    xc = x.reshape(Bt, nc, Lc, H, P)
+    Bc = B.reshape(Bt, nc, Lc, N)
+    Cc = C.reshape(Bt, nc, Lc, N)
+    a_log = a_log.reshape(Bt, nc, Lc, H).astype(jnp.float32)
+    a_log = jnp.moveaxis(a_log, -1, 2)                # (Bt, nc, H, Lc)
+    xdt = xc
+
+    # ---- intra-chunk (attention-like) ----
+    Lmat = jnp.exp(_segsum(a_log))                    # (Bt, nc, H, Lc, Lc)
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)    # (Bt, nc, Lc, Lc)
+    scores = scores[:, :, None] * Lmat                # (Bt, nc, H, Lc, Lc)
+    y_intra = jnp.einsum("bchij,bcjhp->bcihp", scores.astype(x.dtype),
+                         xdt.astype(x.dtype))
+
+    # ---- chunk states ----
+    cum = jnp.cumsum(a_log, axis=-1)                  # (Bt, nc, H, Lc)
+    total = cum[..., -1:]                             # (Bt, nc, H, 1)
+    decay_to_end = jnp.exp(total - cum)               # prod_{k>j} a_k
+    # state contribution of chunk c: sum_j decay_to_end_j * dt_j * B_j (x) x_j
+    states = jnp.einsum("bchj,bcjn,bcjhp->bchpn",
+                        decay_to_end.astype(x.dtype),
+                        Bc.astype(x.dtype), xdt.astype(x.dtype))  # (Bt,nc,H,P,N)
+
+    # ---- inter-chunk scan ----
+    chunk_decay = jnp.exp(total[..., 0])              # (Bt, nc, H)
+
+    def scan_fn(hprev, xs):
+        st, dec = xs                                  # (Bt,H,P,N), (Bt,H)
+        hnew = hprev * dec[..., None, None].astype(hprev.dtype) + st
+        return hnew, hprev                            # emit state ENTERING chunk
+
+    init = (jnp.zeros((Bt, H, P, N), x.dtype) if h0 is None else h0.astype(x.dtype))
+    hfinal, h_enter = jax.lax.scan(
+        scan_fn, init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_enter = jnp.moveaxis(h_enter, 0, 1)             # (Bt, nc, H, P, N)
+
+    # ---- inter-chunk output: y_i += (prod_{k<=i} a_k) * C_i . h_enter ----
+    decay_from_start = jnp.exp(cum)                   # (Bt, nc, H, Lc)
+    y_inter = jnp.einsum("bcin,bchpn,bchi->bcihp",
+                         Cc.astype(x.dtype), h_enter,
+                         decay_from_start.astype(x.dtype))
+
+    y = y_intra + y_inter
+    return y.reshape(Bt, S, H, P), hfinal
+
+
+def ssd_chunked(x, dt, A_log, B, C, D, chunk: int = 128, h0=None):
+    """Mamba2 SSD scan.  h_t = exp(dt_t A) h_{t-1} + dt_t B_t (x) x_t,
+    y_t = C_t . h_t + D x_t.
+
+    x: (Bt,S,H,P); dt: (Bt,S,H) softplus'd; B/C: (Bt,S,N).
+    Returns (y, final_state)."""
+    A = -jnp.exp(A_log.astype(jnp.float32))           # (H,) negative rates
+    a_log = dt.astype(jnp.float32) * A                # (Bt,S,H)
+    x_scaled = x * dt[..., None].astype(x.dtype)
+    y, hfinal = gated_chunked_scan(x_scaled, a_log, B, C, chunk=chunk, h0=h0)
+    return y + x * D.astype(x.dtype)[None, None, :, None], hfinal
+
+
+def mamba2_forward(p, x, cfg: ArchConfig, chunk: int = 128):
+    """Full-sequence forward.  x: (B, S, D) -> (B, S, D)."""
+    b, s, d = x.shape
+    di = d_inner(cfg)
+    H, N = cfg.ssm_heads, cfg.ssm_state
+    P = di // H
+
+    zxbcdt = x @ p["in_proj"].astype(x.dtype)
+    z, xin, Bmat, Cmat, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], axis=-1)
+    conv_in = jnp.concatenate([xin, Bmat, Cmat], axis=-1)
+    conv_out, _ = _depthwise_conv(conv_in, p["conv_w"], p["conv_b"])
+    conv_out = jax.nn.silu(conv_out)
+    xin, Bmat, Cmat = jnp.split(conv_out, [di, di + N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    # checkpoint: the chunked SSD saves O(Lc^2) decay/score residuals per
+    # chunk for backward — recompute them instead (flash-style remat)
+    ssd = jax.checkpoint(lambda xh, dtt, Bm, Cm: ssd_chunked(
+        xh, dtt, p["A_log"], Bm, Cm, p["D"], chunk=chunk)[0])
+    y = ssd(xin.reshape(b, s, H, P), dt, Bmat, Cmat)
+    y = y.reshape(b, s, di)
+    y = L.rmsnorm(p["norm"], y * jax.nn.silu(z))
+    return y @ p["out_proj"].astype(x.dtype)
+
+
+def mamba2_decode(p, x, cfg: ArchConfig, ssm_state, conv_state):
+    """Single-token recurrent step.  x: (B, 1, D).
+
+    ssm_state: (B, H, P, N); conv_state: (B, W-1, conv_ch).
+    Returns (y (B,1,D), new_ssm_state, new_conv_state)."""
+    b = x.shape[0]
+    di = d_inner(cfg)
+    H, N = cfg.ssm_heads, cfg.ssm_state
+    P = di // H
+
+    zxbcdt = x @ p["in_proj"].astype(x.dtype)
+    z, xin, Bmat, Cmat, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], axis=-1)
+    conv_in = jnp.concatenate([xin, Bmat, Cmat], axis=-1)
+    conv_out, new_conv = _depthwise_conv(conv_in, p["conv_w"], p["conv_b"],
+                                         state=conv_state)
+    conv_out = jax.nn.silu(conv_out)
+    xin, Bmat, Cmat = jnp.split(conv_out, [di, di + N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B, 1, H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    a = jnp.exp(dt[:, 0] * A)                                    # (B, H)
+    xh = xin.reshape(b, H, P)
+    dB = dt[:, 0, :, None] * Bmat[:, 0][:, None, :]              # (B, H, N)
+    new_state = (ssm_state * a[..., None, None]
+                 + xh[..., :, None].astype(jnp.float32) * dB[..., None, :])
+    y = jnp.einsum("bhpn,bn->bhp", new_state.astype(x.dtype), Cmat[:, 0])
+    y = y + xh * p["D"].astype(x.dtype)[None, :, None]
+    y = y.reshape(b, 1, di)
+    y = L.rmsnorm(p["norm"], y * jax.nn.silu(z))
+    return y @ p["out_proj"].astype(x.dtype), new_state, new_conv
+
+
+def init_states(cfg: ArchConfig, batch: int, dtype=jnp.float32):
+    di = d_inner(cfg)
+    H, N = cfg.ssm_heads, cfg.ssm_state
+    P = di // H
+    conv_ch = di + 2 * N
+    return (jnp.zeros((batch, H, P, N), jnp.float32),
+            jnp.zeros((batch, cfg.conv_width - 1, conv_ch), dtype))

@@ -1,0 +1,227 @@
+"""Dense decoder-only transformer LM (GQA + RoPE + SwiGLU).
+
+Covers assigned archs: internlm2-1.8b, qwen2-0.5b (qkv bias), deepseek-7b,
+smollm-360m, and the internvl2-26b LM backbone (vision_tokens > 0 prepends
+stub patch embeddings per the assignment: the ViT frontend is NOT modeled).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models.base import (Unit, dense_unit, init_stacked, scan_layers,
+                               scan_layers_with_cache, stacked_units)
+
+from repro.dist.ctx import constrain_layer_io
+
+PyTree = Any
+
+
+# ------------------------------------------------------------------ init
+
+def _norm_fns(cfg: ArchConfig):
+    if cfg.norm == "layernorm":
+        return L.layernorm_init, L.layernorm
+    return L.rmsnorm_init, L.rmsnorm
+
+
+def _mlp_fns(cfg: ArchConfig):
+    if cfg.mlp == "gelu":
+        return L.gelu_mlp_init, L.gelu_mlp
+    return L.swiglu_init, L.swiglu
+
+
+def init_layer(cfg: ArchConfig):
+    norm_init, _ = _norm_fns(cfg)
+    mlp_init, _ = _mlp_fns(cfg)
+
+    def one(key):
+        k1, k2 = jax.random.split(key)
+        return {
+            "ln1": norm_init(cfg.d_model),
+            "attn": L.gqa_attention_init(k1, cfg.d_model, cfg.n_heads,
+                                         cfg.kv_heads, cfg.head_dim, cfg.qkv_bias),
+            "ln2": norm_init(cfg.d_model),
+            "mlp": mlp_init(k2, cfg.d_model, cfg.d_ff),
+        }
+    return one
+
+
+def init(cfg: ArchConfig, key) -> PyTree:
+    norm_init, _ = _norm_fns(cfg)
+    k_embed, k_layers, k_head = jax.random.split(key, 3)
+    head = {"final_norm": norm_init(cfg.d_model)}
+    if not cfg.tie_embeddings:
+        head["w"] = L.dense_init(k_head, cfg.d_model, cfg.vocab_padded)
+    params = {
+        "embed": {"tok": L.embed_init(k_embed, cfg.vocab_padded, cfg.d_model)},
+        "layers": init_stacked(init_layer(cfg), k_layers, cfg.n_layers),
+        "head": head,
+    }
+    return params
+
+
+def head_weight(cfg: ArchConfig, params) -> jnp.ndarray:
+    """(D, V): separate head weight, or the tied embedding transposed."""
+    if cfg.tie_embeddings:
+        return params["embed"]["tok"].T
+    return params["head"]["w"]
+
+
+def unit_spec(cfg: ArchConfig) -> list[Unit]:
+    return [dense_unit("embed")] + stacked_units("layers", cfg.n_layers) + [dense_unit("head")]
+
+
+# --------------------------------------------------------------- forward
+
+def _rope(cfg: ArchConfig, max_len: int):
+    return L.rope_frequencies(cfg.head_dim, max_len, cfg.rope_theta)
+
+
+def _block(cfg: ArchConfig, cos, sin):
+    _, norm = _norm_fns(cfg)
+    _, mlp = _mlp_fns(cfg)
+
+    def step(h, p):
+        h = h + L.gqa_attention(p["attn"], norm(p["ln1"], h), cfg, cos, sin,
+                                impl=cfg.attention_impl,
+                                balanced=cfg.attention_balanced)
+        h = h + mlp(p["mlp"], norm(p["ln2"], h))
+        return h
+    return step
+
+
+def _embed_in(cfg: ArchConfig, params, batch):
+    tok = batch["tokens"]
+    h = params["embed"]["tok"][tok]
+    if cfg.vision_tokens > 0:
+        vis = batch["vision_embeds"].astype(h.dtype)  # (B, S_img, D) stub frontend
+        h = jnp.concatenate([vis, h], axis=1)
+    return h
+
+
+def apply(cfg: ArchConfig, params: PyTree, batch, cut: Optional[int] = None,
+          compute_dtype=jnp.bfloat16, return_hidden: bool = False):
+    """Training forward -> logits (B, S, V).
+
+    ``cut``: HiFT backward cut.  None = FPFT (grads may flow to embed).
+    cut=c >= 0 means the embedding and the first c layers are frozen: a
+    stop_gradient is inserted after the embedding and after layer c, so
+    backward never descends below the active group (the paper's
+    "cut gradient propagation to shallow layers").
+    """
+    h = constrain_layer_io(_embed_in(cfg, params, batch).astype(compute_dtype))
+    seq = h.shape[1]
+    cos, sin = _rope(cfg, seq)
+    if cut is not None:
+        h = jax.lax.stop_gradient(h)
+    h = scan_layers(_block(cfg, cos, sin), params["layers"], h,
+                    cut=cut, remat=cfg.remat == "layer")
+    h = _norm_fns(cfg)[1](params["head"]["final_norm"], h)
+    if return_hidden:
+        return h
+    logits = h @ head_weight(cfg, params).astype(h.dtype)
+    return logits.astype(jnp.float32)
+
+
+def loss_fn(cfg: ArchConfig, params: PyTree, batch, cut: Optional[int] = None,
+            compute_dtype=jnp.bfloat16):
+    """Next-token cross-entropy (chunked: never materializes (B,S,V))."""
+    from repro.models.losses import chunked_next_token_xent
+    h = apply(cfg, params, batch, cut=cut, compute_dtype=compute_dtype,
+              return_hidden=True)
+    if cfg.vision_tokens > 0:
+        h = h[:, cfg.vision_tokens:]
+    return chunked_next_token_xent(h, head_weight(cfg, params), batch["labels"],
+                                   chunk=cfg.ce_chunk or None)
+
+
+# ---------------------------------------------------------------- serving
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    hd = cfg.head_dim
+    shape = (cfg.n_layers, batch, max_len, cfg.kv_heads, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+def prefill(cfg: ArchConfig, params: PyTree, batch, cache: PyTree,
+            compute_dtype=jnp.bfloat16):
+    """Run the full prompt, fill the KV cache, return last-token logits."""
+    h = _embed_in(cfg, params, batch).astype(compute_dtype)
+    b, s, _ = h.shape
+    cos, sin = _rope(cfg, s)
+    cache_dtype = cache["k"].dtype
+
+    def step(h, xs):
+        p, _ = xs
+        hn = L.rmsnorm(p["ln1"], h)
+        q = hn @ p["attn"]["wq"].astype(h.dtype)
+        k = hn @ p["attn"]["wk"].astype(h.dtype)
+        v = hn @ p["attn"]["wv"].astype(h.dtype)
+        if "bq" in p["attn"]:
+            q = q + p["attn"]["bq"].astype(h.dtype)
+            k = k + p["attn"]["bk"].astype(h.dtype)
+            v = v + p["attn"]["bv"].astype(h.dtype)
+        q = q.reshape(b, s, cfg.n_heads, cfg.head_dim)
+        k = k.reshape(b, s, cfg.kv_heads, cfg.head_dim)
+        v = v.reshape(b, s, cfg.kv_heads, cfg.head_dim)
+        q = L.apply_rope(q, cos, sin)
+        k = L.apply_rope(k, cos, sin)
+        new_entry = {"k": k.astype(cache_dtype), "v": v.astype(cache_dtype)}
+        n_rep = cfg.n_heads // cfg.kv_heads
+        kk = L._repeat_kv(k, n_rep)
+        vv = L._repeat_kv(v, n_rep)
+        o = L.chunked_causal_attention(q, kk, vv, cfg.block_q, cfg.block_k,
+                                       balanced=cfg.attention_balanced)
+        h = h + o.reshape(b, s, cfg.n_heads * cfg.head_dim) @ p["attn"]["wo"].astype(h.dtype)
+        h = h + L.swiglu(p["mlp"], L.rmsnorm(p["ln2"], h))
+        return h, new_entry
+
+    def scan_step(carry, xs):
+        h = carry
+        h, entry = step(h, xs)
+        return h, entry
+
+    h, entries = jax.lax.scan(scan_step, h, (params["layers"], jnp.arange(cfg.n_layers)))
+    cache = {
+        "k": jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], entries["k"], 0, axis=2),
+        "v": jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], entries["v"], 0, axis=2),
+        "pos": jnp.asarray(s, jnp.int32),
+    }
+    h = _norm_fns(cfg)[1](params["head"]["final_norm"], h[:, -1:])
+    logits = h @ head_weight(cfg, params).astype(h.dtype)
+    return logits.astype(jnp.float32), cache
+
+
+def decode_step(cfg: ArchConfig, params: PyTree, cache: PyTree, tokens,
+                compute_dtype=jnp.bfloat16):
+    """One new token per sequence with a pre-filled KV cache.
+
+    tokens: (B, 1) int32.  Returns (logits (B, 1, V), new_cache).
+    """
+    h = params["embed"]["tok"][tokens].astype(compute_dtype)
+    max_len = cache["k"].shape[2]
+    cos, sin = _rope(cfg, max_len)
+    pos = cache["pos"]
+
+    def step(h, p, layer_cache):
+        hn = L.rmsnorm(p["ln1"], h)
+        o, ck, cv = L.gqa_decode_attention(p["attn"], hn, cfg, cos, sin,
+                                           layer_cache["k"], layer_cache["v"], pos)
+        h = h + o
+        h = h + L.swiglu(p["mlp"], L.rmsnorm(p["ln2"], h))
+        return h, {"k": ck, "v": cv}
+
+    h, new_kv = scan_layers_with_cache(step, params["layers"],
+                                       {"k": cache["k"], "v": cache["v"]}, h)
+    h = _norm_fns(cfg)[1](params["head"]["final_norm"], h)
+    logits = h @ head_weight(cfg, params).astype(h.dtype)
+    return logits.astype(jnp.float32), {"k": new_kv["k"], "v": new_kv["v"],
+                                        "pos": pos + 1}

@@ -1,0 +1,387 @@
+"""xLSTM LM: mLSTM (matrix-memory, chunk-parallel) + sLSTM (scalar-memory,
+sequential) blocks, ratio (slstm_every-1):1.
+
+mLSTM recurrence per head (state C: P x N matrix, normalizer n: N):
+    C_t = f_t C_{t-1} + i_t v_t k_t^T        n_t = f_t n_{t-1} + i_t k_t
+    y_t = (C_t q_t) / max(|n_t . q_t|, 1)
+computed with the same chunked gated scan as Mamba2 (mamba2.gated_chunked_scan)
+by folding heads into the batch dim and appending a ones-channel to v for the
+normalizer.  Gates use sigmoid (bounded) instead of the paper's stabilized
+exp input gate — recorded as a deviation in DESIGN.md.
+
+sLSTM is a true sequential recurrence (lax.scan over time) with exponential
+gating + stabilizer state m.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models.base import Unit, dense_unit, init_stacked, stacked_units
+from repro.models.mamba2 import gated_chunked_scan
+
+from repro.dist.ctx import constrain_layer_io
+
+PyTree = Any
+
+
+# ------------------------------------------------------------------- mLSTM
+
+def mlstm_init(key, cfg: ArchConfig):
+    d = cfg.d_model
+    di = cfg.expand * d
+    H = cfg.n_heads
+    hd = di // H
+    N = hd  # key dim per head = head dim
+    ks = jax.random.split(key, 8)
+    return {
+        "ln": L.rmsnorm_init(d),
+        "w_up": L.dense_init(ks[0], d, di),
+        "w_gate": L.dense_init(ks[1], d, di),
+        "wq": L.dense_init(ks[2], di, di),
+        "wk": L.dense_init(ks[3], di, di),
+        "wv": L.dense_init(ks[4], di, di),
+        "w_i": L.dense_init(ks[5], di, H),
+        "w_f": L.dense_init(ks[6], di, H),
+        "b_f": jnp.full((H,), 3.0, jnp.float32),  # bias toward remembering
+        "out_norm": L.rmsnorm_init(di),
+        "w_down": L.dense_init(ks[7], di, d),
+    }
+
+
+def _mlstm_qkvgates(p, hn, cfg):
+    b, s, _ = hn.shape
+    di = cfg.expand * cfg.d_model
+    H = cfg.n_heads
+    hd = di // H
+    x_in = hn @ p["w_up"].astype(hn.dtype)
+    z = hn @ p["w_gate"].astype(hn.dtype)
+    q = (x_in @ p["wq"].astype(hn.dtype)).reshape(b, s, H, hd) / math.sqrt(hd)
+    k = (x_in @ p["wk"].astype(hn.dtype)).reshape(b, s, H, hd)
+    v = (x_in @ p["wv"].astype(hn.dtype)).reshape(b, s, H, hd)
+    i_gate = jax.nn.sigmoid((x_in @ p["w_i"].astype(hn.dtype)).astype(jnp.float32))
+    f_raw = (x_in @ p["w_f"].astype(hn.dtype)).astype(jnp.float32) + p["b_f"]
+    f_log = jax.nn.log_sigmoid(f_raw)
+    return x_in, z, q, k, v, i_gate, f_log
+
+
+def mlstm_forward(p, h, cfg: ArchConfig, chunk: int = 128):
+    """h: (B, S, D) -> (B, S, D)."""
+    b, s, _ = h.shape
+    di = cfg.expand * cfg.d_model
+    H = cfg.n_heads
+    hd = di // H
+    hn = L.rmsnorm(p["ln"], h)
+    x_in, z, q, k, v, i_gate, f_log = _mlstm_qkvgates(p, hn, cfg)
+
+    # fold heads into batch so per-head k/q act as the scan's B/C
+    v_aug = jnp.concatenate([v, jnp.ones(v.shape[:-1] + (1,), v.dtype)], axis=-1)
+    x_scaled = v_aug * i_gate[..., None].astype(v.dtype)       # (B,S,H,hd+1)
+    xs = jnp.moveaxis(x_scaled, 2, 1).reshape(b * H, s, 1, hd + 1)
+    a_log = jnp.moveaxis(f_log, 2, 1).reshape(b * H, s, 1)
+    Bmat = jnp.moveaxis(k, 2, 1).reshape(b * H, s, hd)
+    Cmat = jnp.moveaxis(q, 2, 1).reshape(b * H, s, hd)
+
+    scan_ck = jax.checkpoint(
+        lambda xsS, aS, BS, CS: gated_chunked_scan(xsS, aS, BS, CS, chunk=chunk)[0])
+    y_aug = scan_ck(xs, a_log, Bmat, Cmat)
+    y_aug = y_aug.reshape(b, H, s, hd + 1)
+    y = y_aug[..., :hd]
+    denom = jnp.maximum(jnp.abs(y_aug[..., hd:]), 1.0)
+    y = (y / denom).astype(h.dtype)
+    y = jnp.moveaxis(y, 1, 2).reshape(b, s, di)
+    y = L.rmsnorm(p["out_norm"], y) * jax.nn.silu(z)
+    return h + y @ p["w_down"].astype(h.dtype)
+
+
+def mlstm_decode(p, h, cfg: ArchConfig, state):
+    """One-token step.  state: {"C": (B,H,hd+1,hd), "count"} matrix memory."""
+    b = h.shape[0]
+    di = cfg.expand * cfg.d_model
+    H = cfg.n_heads
+    hd = di // H
+    hn = L.rmsnorm(p["ln"], h)
+    x_in, z, q, k, v, i_gate, f_log = _mlstm_qkvgates(p, hn, cfg)
+    f = jnp.exp(f_log[:, 0])                                  # (B, H)
+    i_g = i_gate[:, 0]                                        # (B, H)
+    v_aug = jnp.concatenate([v, jnp.ones(v.shape[:-1] + (1,), v.dtype)], -1)[:, 0]
+    C = state["C"] * f[..., None, None] + (
+        i_g[..., None, None] * jnp.einsum("bhp,bhn->bhpn",
+                                          v_aug.astype(jnp.float32),
+                                          k[:, 0].astype(jnp.float32)))
+    y_aug = jnp.einsum("bhpn,bhn->bhp", C, q[:, 0].astype(jnp.float32))
+    y = y_aug[..., :hd] / jnp.maximum(jnp.abs(y_aug[..., hd:]), 1.0)
+    y = y.reshape(b, 1, di).astype(h.dtype)
+    y = L.rmsnorm(p["out_norm"], y) * jax.nn.silu(z)
+    return h + y @ p["w_down"].astype(h.dtype), {"C": C}
+
+
+# ------------------------------------------------------------------- sLSTM
+
+def slstm_init(key, cfg: ArchConfig):
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    ks = jax.random.split(key, 6)
+    r = lambda kk: jax.random.normal(kk, (H, dh, dh), jnp.float32) / math.sqrt(dh)
+    return {
+        "ln": L.rmsnorm_init(d),
+        "w_zifo": L.dense_init(ks[0], d, 4 * d),
+        "r_z": r(ks[1]), "r_i": r(ks[2]), "r_f": r(ks[3]), "r_o": r(ks[4]),
+        "b_zifo": jnp.zeros((4 * d,), jnp.float32),
+        "w_out": L.dense_init(ks[5], d, d),
+    }
+
+
+def _slstm_scan(p, x_gates, cfg: ArchConfig, state):
+    """x_gates: (B, S, 4d) precomputed input contributions.
+    state: dict(c, n, h, m) each (B, H, dh).  Sequential over S."""
+    b, s, _ = x_gates.shape
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+
+    def step(st, xg):
+        c, n, hprev, m = st["c"], st["n"], st["h"], st["m"]
+        zx, ix, fx, ox = jnp.split(xg, 4, axis=-1)           # (B, d) each
+        hp = hprev.reshape(b, H, dh)
+        rec = lambda R: jnp.einsum("bhd,hde->bhe", hp, R).reshape(b, d)
+        z = jnp.tanh(zx + rec(p["r_z"])).reshape(b, H, dh)
+        i_t = (ix + rec(p["r_i"])).reshape(b, H, dh)
+        f_t = (fx + rec(p["r_f"])).reshape(b, H, dh)
+        o = jax.nn.sigmoid(ox + rec(p["r_o"])).reshape(b, H, dh)
+        f_log = jax.nn.log_sigmoid(f_t)
+        m_new = jnp.maximum(f_log + m, i_t)                  # stabilizer
+        i_p = jnp.exp(i_t - m_new)
+        f_p = jnp.exp(f_log + m - m_new)
+        c_new = f_p * c + i_p * z
+        n_new = f_p * n + i_p
+        h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+        return ({"c": c_new, "n": n_new, "h": h_new.reshape(b, H, dh), "m": m_new},
+                h_new.reshape(b, d))
+
+    xg = jnp.moveaxis(x_gates.astype(jnp.float32), 1, 0)     # (S, B, 4d)
+    st, ys = jax.lax.scan(step, state, xg)
+    return jnp.moveaxis(ys, 0, 1), st                        # (B, S, d)
+
+
+def slstm_forward(p, h, cfg: ArchConfig, state=None):
+    b = h.shape[0]
+    hn = L.rmsnorm(p["ln"], h)
+    xg = hn @ p["w_zifo"].astype(h.dtype) + p["b_zifo"].astype(h.dtype)
+    if state is None:
+        state = slstm_zero_state(cfg, b)
+    ys, st = _slstm_scan(p, xg, cfg, state)
+    return h + ys.astype(h.dtype) @ p["w_out"].astype(h.dtype), st
+
+
+def slstm_zero_state(cfg: ArchConfig, batch: int):
+    H = cfg.n_heads
+    dh = cfg.d_model // H
+    zero = jnp.zeros((batch, H, dh), jnp.float32)
+    return {"c": zero, "n": zero, "h": zero, "m": zero}
+
+
+# -------------------------------------------------------------------- model
+
+def _n_sb(cfg: ArchConfig) -> int:
+    assert cfg.n_layers % cfg.slstm_every == 0
+    return cfg.n_layers // cfg.slstm_every
+
+
+def init(cfg: ArchConfig, key) -> PyTree:
+    n_sb = _n_sb(cfg)
+    n_m = n_sb * (cfg.slstm_every - 1)
+    k_embed, k_m, k_s, k_head = jax.random.split(key, 4)
+    return {
+        "embed": {"tok": L.embed_init(k_embed, cfg.vocab_padded, cfg.d_model)},
+        "mlstm": init_stacked(lambda k: mlstm_init(k, cfg), k_m, n_m),
+        "slstm": init_stacked(lambda k: slstm_init(k, cfg), k_s, n_sb),
+        "head": {
+            "final_norm": L.rmsnorm_init(cfg.d_model),
+            "w": L.dense_init(k_head, cfg.d_model, cfg.vocab_padded),
+        },
+    }
+
+
+def unit_spec(cfg: ArchConfig) -> list[Unit]:
+    units = [dense_unit("embed")]
+    n_sb = _n_sb(cfg)
+    m_per = cfg.slstm_every - 1
+    for sb in range(n_sb):
+        units += [Unit("stacked", "mlstm", sb * m_per + j) for j in range(m_per)]
+        units += [Unit("stacked", "slstm", sb)]
+    units.append(dense_unit("head"))
+    return units
+
+
+def unit_first_depth(cfg: ArchConfig, unit: Unit) -> int:
+    m_per = cfg.slstm_every - 1
+    if unit.key == "embed":
+        return 0
+    if unit.key == "mlstm":
+        sb, j = divmod(unit.index, m_per)
+        return sb * cfg.slstm_every + j
+    if unit.key == "slstm":
+        return unit.index * cfg.slstm_every + m_per
+    return cfg.n_layers  # head
+
+
+def apply(cfg: ArchConfig, params: PyTree, batch, cut: Optional[int] = None,
+          compute_dtype=jnp.bfloat16, return_hidden: bool = False):
+    h = constrain_layer_io(params["embed"]["tok"][batch["tokens"]].astype(compute_dtype))
+    b = h.shape[0]
+    n_sb = _n_sb(cfg)
+    m_per = cfg.slstm_every - 1
+    m_sb = jax.tree.map(lambda x: x.reshape((n_sb, m_per) + x.shape[1:]),
+                        params["mlstm"])
+
+    def super_block(h, xs):
+        p_m, p_s = xs
+
+        def inner(carry, p_layer):
+            return mlstm_forward(p_layer, carry, cfg), None
+
+        h, _ = jax.lax.scan(inner, h, p_m)
+        h, _ = slstm_forward(p_s, h, cfg)
+        return constrain_layer_io(h), None
+
+    if cfg.remat == "layer":
+        super_block = jax.checkpoint(super_block)
+
+    if cut is not None:
+        h = jax.lax.stop_gradient(h)
+        sb_cut = min(cut // cfg.slstm_every, n_sb)
+    else:
+        sb_cut = 0
+
+    xs = (m_sb, params["slstm"])
+    if sb_cut > 0:
+        pre = jax.tree.map(lambda x: x[:sb_cut], xs)
+        post = jax.tree.map(lambda x: x[sb_cut:], xs)
+        h, _ = jax.lax.scan(super_block, h, pre)
+        h = jax.lax.stop_gradient(h)
+        if n_sb - sb_cut > 0:
+            h, _ = jax.lax.scan(super_block, h, post)
+    else:
+        h, _ = jax.lax.scan(super_block, h, xs)
+
+    h = L.rmsnorm(params["head"]["final_norm"], h)
+    if return_hidden:
+        return h
+    return (h @ params["head"]["w"].astype(h.dtype)).astype(jnp.float32)
+
+
+def loss_fn(cfg: ArchConfig, params: PyTree, batch, cut: Optional[int] = None,
+            compute_dtype=jnp.bfloat16):
+    from repro.models.losses import chunked_next_token_xent
+    h = apply(cfg, params, batch, cut=cut, compute_dtype=compute_dtype,
+              return_hidden=True)
+    return chunked_next_token_xent(h, params["head"]["w"], batch["labels"],
+                                   chunk=cfg.ce_chunk or None)
+
+
+# ---------------------------------------------------------------- serving
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int = 0, dtype=jnp.bfloat16):
+    """Constant-size state — this is why xlstm runs the long_500k cell."""
+    n_sb = _n_sb(cfg)
+    n_m = n_sb * (cfg.slstm_every - 1)
+    di = cfg.expand * cfg.d_model
+    H = cfg.n_heads
+    hd = di // H
+    dh = cfg.d_model // H
+    zero_s = jnp.zeros((n_sb, batch, H, dh), jnp.float32)
+    return {
+        "mlstm_C": jnp.zeros((n_m, batch, H, hd + 1, hd), jnp.float32),
+        "slstm": {"c": zero_s, "n": zero_s, "h": zero_s, "m": zero_s},
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_step(cfg: ArchConfig, params: PyTree, cache: PyTree, tokens,
+                compute_dtype=jnp.bfloat16):
+    h = params["embed"]["tok"][tokens].astype(compute_dtype)
+    n_sb = _n_sb(cfg)
+    m_per = cfg.slstm_every - 1
+    m_sb = jax.tree.map(lambda x: x.reshape((n_sb, m_per) + x.shape[1:]),
+                        params["mlstm"])
+    C_sb = cache["mlstm_C"].reshape((n_sb, m_per) + cache["mlstm_C"].shape[1:])
+
+    def super_block(h, xs):
+        p_m, p_s, C_in, s_state = xs
+
+        def inner(carry, xs_inner):
+            p_layer, C = xs_inner
+            h, new = mlstm_decode(p_layer, carry, cfg, {"C": C})
+            return h, new["C"]
+
+        h, C_out = jax.lax.scan(inner, h, (p_m, C_in))
+        hn = L.rmsnorm(p_s["ln"], h)
+        xg = hn @ p_s["w_zifo"].astype(h.dtype) + p_s["b_zifo"].astype(h.dtype)
+        ys, s_new = _slstm_scan(p_s, xg, cfg, s_state)
+        h = h + ys.astype(h.dtype) @ p_s["w_out"].astype(h.dtype)
+        return h, (C_out, s_new)
+
+    h, (new_C, new_s) = jax.lax.scan(
+        super_block, h, (m_sb, params["slstm"], C_sb, cache["slstm"]))
+    h = L.rmsnorm(params["head"]["final_norm"], h)
+    logits = (h @ params["head"]["w"].astype(h.dtype)).astype(jnp.float32)
+    return logits, {"mlstm_C": new_C.reshape(cache["mlstm_C"].shape),
+                    "slstm": new_s, "pos": cache["pos"] + 1}
+
+
+def prefill(cfg: ArchConfig, params: PyTree, batch, cache: PyTree,
+            compute_dtype=jnp.bfloat16):
+    """For state-based models prefill == run the full forward once while
+    collecting final states; implemented as repeated decode for simplicity
+    of state plumbing is too slow, so we run chunk-parallel mLSTM and
+    sequential sLSTM keeping final states."""
+    h = params["embed"]["tok"][batch["tokens"]].astype(compute_dtype)
+    b, s, _ = h.shape
+    n_sb = _n_sb(cfg)
+    m_per = cfg.slstm_every - 1
+    di = cfg.expand * cfg.d_model
+    H = cfg.n_heads
+    hd = di // H
+    m_sb = jax.tree.map(lambda x: x.reshape((n_sb, m_per) + x.shape[1:]),
+                        params["mlstm"])
+
+    def mlstm_prefill(p, h):
+        hn = L.rmsnorm(p["ln"], h)
+        x_in, z, q, k, v, i_gate, f_log = _mlstm_qkvgates(p, hn, cfg)
+        v_aug = jnp.concatenate([v, jnp.ones(v.shape[:-1] + (1,), v.dtype)], -1)
+        x_scaled = v_aug * i_gate[..., None].astype(v.dtype)
+        xs = jnp.moveaxis(x_scaled, 2, 1).reshape(b * H, s, 1, hd + 1)
+        a_log = jnp.moveaxis(f_log, 2, 1).reshape(b * H, s, 1)
+        Bm = jnp.moveaxis(k, 2, 1).reshape(b * H, s, hd)
+        Cm = jnp.moveaxis(q, 2, 1).reshape(b * H, s, hd)
+        y_aug, hC = gated_chunked_scan(xs, a_log, Bm, Cm)
+        y_aug = y_aug.reshape(b, H, s, hd + 1)
+        y = (y_aug[..., :hd] / jnp.maximum(jnp.abs(y_aug[..., hd:]), 1.0)).astype(h.dtype)
+        y = jnp.moveaxis(y, 1, 2).reshape(b, s, di)
+        y = L.rmsnorm(p["out_norm"], y) * jax.nn.silu(z)
+        C = hC.reshape(b, H, hd + 1, hd).astype(jnp.float32)
+        return h + y @ p["w_down"].astype(h.dtype), C
+
+    def super_block(h, xs):
+        p_m, p_s, s_state = xs
+
+        def inner(carry, p_layer):
+            return mlstm_prefill(p_layer, carry)
+
+        h, C_out = jax.lax.scan(inner, h, p_m)
+        h, s_new = slstm_forward(p_s, h, cfg, state=s_state)
+        return h, (C_out, s_new)
+
+    h, (new_C, new_s) = jax.lax.scan(
+        super_block, h, (m_sb, params["slstm"], cache["slstm"]))
+    h = L.rmsnorm(params["head"]["final_norm"], h[:, -1:])
+    logits = (h @ params["head"]["w"].astype(h.dtype)).astype(jnp.float32)
+    return logits, {"mlstm_C": new_C.reshape(cache["mlstm_C"].shape),
+                    "slstm": new_s, "pos": jnp.asarray(s, jnp.int32)}

@@ -1,0 +1,254 @@
+"""Zamba2-style hybrid: stacked Mamba2 blocks + one SHARED attention block
+applied every ``attn_every`` Mamba layers.
+
+Simplifications vs the released checkpoint (recorded in DESIGN.md):
+- the shared block has a single set of weights reused at every application
+  (the per-invocation LoRA deltas of the release are omitted);
+- the shared block is a standard pre-norm attention+MLP block over d_model.
+
+HiFT units: [embed] + mamba[0..L-1] + [shared_attn] + [head].  The shared
+block's parameters are first used at depth ``attn_every``, so a backward cut
+below it is only safe at super-block granularity — ``apply`` rounds the cut
+down to a multiple of ``attn_every`` (conservative = always correct).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import mamba2 as M
+from repro.models.base import Unit, dense_unit, init_stacked, stacked_units
+
+from repro.dist.ctx import constrain_layer_io
+
+PyTree = Any
+
+
+def init(cfg: ArchConfig, key) -> PyTree:
+    k_embed, k_layers, k_shared1, k_shared2, k_head = jax.random.split(key, 5)
+    assert cfg.n_layers % cfg.attn_every == 0, "n_layers must divide into super-blocks"
+    return {
+        "embed": {"tok": L.embed_init(k_embed, cfg.vocab_padded, cfg.d_model)},
+        "layers": init_stacked(lambda k: {"ln": L.rmsnorm_init(cfg.d_model),
+                                          "mamba": M.mamba2_init(k, cfg)},
+                               k_layers, cfg.n_layers),
+        "shared": {
+            "ln1": L.rmsnorm_init(cfg.d_model),
+            "attn": L.gqa_attention_init(k_shared1, cfg.d_model, cfg.n_heads,
+                                         cfg.kv_heads, cfg.head_dim),
+            "ln2": L.rmsnorm_init(cfg.d_model),
+            "mlp": L.swiglu_init(k_shared2, cfg.d_model, cfg.d_ff),
+        },
+        "head": {
+            "final_norm": L.rmsnorm_init(cfg.d_model),
+            "w": L.dense_init(k_head, cfg.d_model, cfg.vocab_padded),
+        },
+    }
+
+
+def unit_spec(cfg: ArchConfig) -> list[Unit]:
+    return ([dense_unit("embed")] + stacked_units("layers", cfg.n_layers)
+            + [dense_unit("shared"), dense_unit("head")])
+
+
+def _super_blocks(cfg: ArchConfig, params):
+    """Reshape stacked (L, ...) layer params to (n_sb, attn_every, ...)."""
+    n_sb = cfg.n_layers // cfg.attn_every
+    return jax.tree.map(
+        lambda x: x.reshape((n_sb, cfg.attn_every) + x.shape[1:]), params["layers"]), n_sb
+
+
+def apply(cfg: ArchConfig, params: PyTree, batch, cut: Optional[int] = None,
+          compute_dtype=jnp.bfloat16, return_hidden: bool = False):
+    h = constrain_layer_io(params["embed"]["tok"][batch["tokens"]].astype(compute_dtype))
+    s = h.shape[1]
+    cos, sin = L.rope_frequencies(cfg.head_dim, s, cfg.rope_theta)
+    shared = params["shared"]
+    sb_layers, n_sb = _super_blocks(cfg, params)
+
+    def mamba_step(h, p):
+        return h + M.mamba2_forward(p["mamba"], L.rmsnorm(p["ln"], h), cfg), None
+
+    def super_block(h, sb_params):
+        h, _ = jax.lax.scan(mamba_step, h, sb_params)
+        hn = L.rmsnorm(shared["ln1"], h)
+        h = h + L.gqa_attention(shared["attn"], hn, cfg, cos, sin,
+                                impl=cfg.attention_impl,
+                                balanced=cfg.attention_balanced)
+        h = h + L.swiglu(shared["mlp"], L.rmsnorm(shared["ln2"], h))
+        return constrain_layer_io(h), None
+
+    if cfg.remat == "layer":
+        super_block = jax.checkpoint(super_block)
+
+    if cut is not None:
+        h = jax.lax.stop_gradient(h)
+        sb_cut = min(cut // cfg.attn_every, n_sb)  # round DOWN: safe
+    else:
+        sb_cut = 0
+
+    if sb_cut > 0:
+        pre = jax.tree.map(lambda x: x[:sb_cut], sb_layers)
+        post = jax.tree.map(lambda x: x[sb_cut:], sb_layers)
+        # frozen-below super-blocks must not receive cotangents, but the
+        # SHARED block is applied inside them too — when the shared unit is
+        # active the core caps the cut at attn_every, keeping this correct.
+        h, _ = jax.lax.scan(super_block, h, pre)
+        h = jax.lax.stop_gradient(h)
+        if n_sb - sb_cut > 0:
+            h, _ = jax.lax.scan(super_block, h, post)
+    else:
+        h, _ = jax.lax.scan(super_block, h, sb_layers)
+
+    h = L.rmsnorm(params["head"]["final_norm"], h)
+    if return_hidden:
+        return h
+    return (h @ params["head"]["w"].astype(h.dtype)).astype(jnp.float32)
+
+
+def unit_first_depth(cfg: ArchConfig, unit: Unit) -> int:
+    """Depth (in mamba-layer index) at which a unit's params are first used."""
+    if unit.key == "embed":
+        return 0
+    if unit.kind == "stacked":
+        return unit.index
+    if unit.key == "shared":
+        return cfg.attn_every  # first application is after super-block 0
+    return cfg.n_layers        # head
+
+
+def loss_fn(cfg: ArchConfig, params: PyTree, batch, cut: Optional[int] = None,
+            compute_dtype=jnp.bfloat16):
+    from repro.models.losses import chunked_next_token_xent
+    h = apply(cfg, params, batch, cut=cut, compute_dtype=compute_dtype,
+              return_hidden=True)
+    return chunked_next_token_xent(h, params["head"]["w"], batch["labels"],
+                                   chunk=cfg.ce_chunk or None)
+
+
+# ---------------------------------------------------------------- serving
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    di = M.d_inner(cfg)
+    H, N = cfg.ssm_heads, cfg.ssm_state
+    P = di // H
+    n_sb = cfg.n_layers // cfg.attn_every
+    return {
+        "ssm": jnp.zeros((cfg.n_layers, batch, H, P, N), jnp.float32),
+        "conv": jnp.zeros((cfg.n_layers, batch, cfg.conv_width - 1, di + 2 * N), dtype),
+        # one KV cache per shared-block APPLICATION (weights shared, KV not)
+        "k": jnp.zeros((n_sb, batch, max_len, cfg.kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((n_sb, batch, max_len, cfg.kv_heads, cfg.head_dim), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_step(cfg: ArchConfig, params: PyTree, cache: PyTree, tokens,
+                compute_dtype=jnp.bfloat16):
+    h = params["embed"]["tok"][tokens].astype(compute_dtype)
+    max_len = cache["k"].shape[2]
+    cos, sin = L.rope_frequencies(cfg.head_dim, max_len, cfg.rope_theta)
+    pos = cache["pos"]
+    shared = params["shared"]
+    sb_layers, n_sb = _super_blocks(cfg, params)
+    sb_ssm = cache["ssm"].reshape((n_sb, cfg.attn_every) + cache["ssm"].shape[1:])
+    sb_conv = cache["conv"].reshape((n_sb, cfg.attn_every) + cache["conv"].shape[1:])
+
+    def mamba_step(h, xs):
+        p, ssm, conv = xs
+        y, ssm, conv = M.mamba2_decode(p["mamba"], L.rmsnorm(p["ln"], h), cfg, ssm, conv)
+        return h + y, (ssm, conv)
+
+    def super_block(h, xs):
+        p_sb, ssm_sb, conv_sb, kcache, vcache = xs
+
+        def inner(carry, xs_inner):
+            h = carry
+            h, st = mamba_step(h, xs_inner)
+            return h, st
+
+        h, (ssm_sb, conv_sb) = jax.lax.scan(inner, h, (p_sb, ssm_sb, conv_sb))
+        hn = L.rmsnorm(shared["ln1"], h)
+        o, kcache, vcache = L.gqa_decode_attention(shared["attn"], hn, cfg,
+                                                   cos, sin, kcache, vcache, pos)
+        h = h + o
+        h = h + L.swiglu(shared["mlp"], L.rmsnorm(shared["ln2"], h))
+        return h, (ssm_sb, conv_sb, kcache, vcache)
+
+    h, (new_ssm, new_conv, new_k, new_v) = jax.lax.scan(
+        super_block, h, (sb_layers, sb_ssm, sb_conv, cache["k"], cache["v"]))
+    h = L.rmsnorm(params["head"]["final_norm"], h)
+    logits = (h @ params["head"]["w"].astype(h.dtype)).astype(jnp.float32)
+    return logits, {
+        "ssm": new_ssm.reshape(cache["ssm"].shape),
+        "conv": new_conv.reshape(cache["conv"].shape),
+        "k": new_k, "v": new_v, "pos": pos + 1,
+    }
+
+
+def prefill(cfg: ArchConfig, params: PyTree, batch, cache: PyTree,
+            compute_dtype=jnp.bfloat16):
+    """Prompt pass: chunked SSD fills SSM/conv states, attention fills KV."""
+    h = params["embed"]["tok"][batch["tokens"]].astype(compute_dtype)
+    b, s, _ = h.shape
+    cos, sin = L.rope_frequencies(cfg.head_dim, s, cfg.rope_theta)
+    shared = params["shared"]
+    sb_layers, n_sb = _super_blocks(cfg, params)
+    cache_dtype = cache["k"].dtype
+    di = M.d_inner(cfg)
+    N = cfg.ssm_state
+
+    def mamba_prefill_step(h, p):
+        hn = L.rmsnorm(p["ln"], h)
+        pm = p["mamba"]
+        zxbcdt = hn @ pm["in_proj"].astype(h.dtype)
+        z, xin, Bmat, Cmat, dt = jnp.split(
+            zxbcdt, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], axis=-1)
+        conv_in = jnp.concatenate([xin, Bmat, Cmat], axis=-1)
+        conv_out, _ = M._depthwise_conv(conv_in, pm["conv_w"], pm["conv_b"])
+        conv_out = jax.nn.silu(conv_out)
+        xin2, Bmat2, Cmat2 = jnp.split(conv_out, [di, di + N], axis=-1)
+        dt = jax.nn.softplus(dt.astype(jnp.float32) + pm["dt_bias"])
+        H = cfg.ssm_heads
+        P = di // H
+        y, hstate = M.ssd_chunked(xin2.reshape(b, s, H, P), dt, pm["A_log"],
+                                  Bmat2, Cmat2, pm["D"])
+        y = y.reshape(b, s, di)
+        y = L.rmsnorm(pm["norm"], y * jax.nn.silu(z))
+        conv_state = conv_in[:, -(cfg.conv_width - 1):].astype(cache["conv"].dtype)
+        return h + y @ pm["out_proj"].astype(h.dtype), (hstate.astype(jnp.float32), conv_state)
+
+    def super_block(h, p_sb):
+        def inner(carry, p_layer):
+            return mamba_prefill_step(carry, p_layer)
+
+        h, states = jax.lax.scan(inner, h, p_sb)
+        hn = L.rmsnorm(shared["ln1"], h)
+        q = (hn @ shared["attn"]["wq"].astype(h.dtype)).reshape(b, s, cfg.n_heads, cfg.head_dim)
+        k = (hn @ shared["attn"]["wk"].astype(h.dtype)).reshape(b, s, cfg.kv_heads, cfg.head_dim)
+        v = (hn @ shared["attn"]["wv"].astype(h.dtype)).reshape(b, s, cfg.kv_heads, cfg.head_dim)
+        q = L.apply_rope(q, cos, sin)
+        k = L.apply_rope(k, cos, sin)
+        n_rep = cfg.n_heads // cfg.kv_heads
+        o = L.chunked_causal_attention(q, L._repeat_kv(k, n_rep), L._repeat_kv(v, n_rep),
+                                       cfg.block_q, cfg.block_k)
+        h = h + o.reshape(b, s, -1) @ shared["attn"]["wo"].astype(h.dtype)
+        h = h + L.swiglu(shared["mlp"], L.rmsnorm(shared["ln2"], h))
+        return h, (states, k.astype(cache_dtype), v.astype(cache_dtype))
+
+    h, (states, ks, vs) = jax.lax.scan(super_block, h, sb_layers)
+    ssm_states, conv_states = states
+    h = L.rmsnorm(params["head"]["final_norm"], h[:, -1:])
+    logits = (h @ params["head"]["w"].astype(h.dtype)).astype(jnp.float32)
+    new_cache = {
+        "ssm": ssm_states.reshape(cache["ssm"].shape),
+        "conv": conv_states.reshape(cache["conv"].shape),
+        "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], ks, 0, axis=2),
+        "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], vs, 0, axis=2),
+        "pos": jnp.asarray(s, jnp.int32),
+    }
+    return logits, new_cache

@@ -1,0 +1,27 @@
+"""Optimizer registry (paper §C: AdamW, SGDM, SGD, Adafactor, Adagrad)."""
+from repro.optim.adamw import adamw
+from repro.optim.sgd import sgd, sgdm
+from repro.optim.adagrad import adagrad
+from repro.optim.adafactor import adafactor
+from repro.optim.base import Optimizer, OptimizerConfig, clip_by_global_norm
+from repro.optim.mixed_precision import Policy, get_policy
+
+_FACTORIES = {
+    "adamw": adamw,
+    "sgd": sgd,
+    "sgdm": sgdm,
+    "adagrad": adagrad,
+    "adafactor": adafactor,
+}
+
+
+def make_optimizer(name: str, **kwargs) -> Optimizer:
+    if name not in _FACTORIES:
+        raise ValueError(f"unknown optimizer {name!r}; have {sorted(_FACTORIES)}")
+    return _FACTORIES[name](**kwargs)
+
+
+__all__ = [
+    "adamw", "sgd", "sgdm", "adagrad", "adafactor", "make_optimizer",
+    "Optimizer", "OptimizerConfig", "clip_by_global_norm", "Policy", "get_policy",
+]

@@ -1,0 +1,70 @@
+"""Adafactor (Shazeer & Stern, 2018) with factored second moments.
+
+For a (r, c) matrix the second moment is stored as row/col vectors (r + c
+floats instead of r*c) — this is why the paper's #Sta column for Adafactor
+is ~0.2 MB even for 7B models.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import Optimizer, clip_by_global_norm
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2
+
+
+def adafactor(eps1: float = 1e-30, eps2: float = 1e-3,
+              clip_threshold: float = 1.0, weight_decay: float = 0.0,
+              grad_clip: float = 0.0, decay_rate: float = 0.8) -> Optimizer:
+    def init(params):
+        def make(p):
+            if _factored(p.shape):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {
+            "moments": jax.tree.map(make, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, lr):
+        grads = clip_by_global_norm(grads, grad_clip)
+        count = state["count"] + 1
+        t = count.astype(jnp.float32)
+        beta2 = 1.0 - t ** (-decay_rate)
+
+        def upd(p, g, mom):
+            g32 = g.astype(jnp.float32)
+            gsq = jnp.square(g32) + eps1
+            if _factored(p.shape):
+                vr = beta2 * mom["vr"] + (1 - beta2) * jnp.mean(gsq, axis=-1)
+                vc = beta2 * mom["vc"] + (1 - beta2) * jnp.mean(gsq, axis=-2)
+                denom = jnp.mean(vr, axis=-1, keepdims=True)
+                # rank-1 approximation of the second moment: vr/denom (x) vc
+                u = g32 / (jnp.sqrt(vr / denom)[..., None]
+                           * jnp.sqrt(jnp.expand_dims(vc, -2)))
+                new_mom = {"vr": vr, "vc": vc}
+            else:
+                v = beta2 * mom["v"] + (1 - beta2) * gsq
+                u = g32 / jnp.sqrt(v)
+                new_mom = {"v": v}
+            rms_u = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+            u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+            step = lr * (u + weight_decay * p.astype(jnp.float32))
+            return (p.astype(jnp.float32) - step).astype(p.dtype), new_mom
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state["moments"])
+        out = [upd(p, g, m) for p, g, m in zip(flat_p, flat_g, flat_m)]
+        return (treedef.unflatten([o[0] for o in out]),
+                {"moments": treedef.unflatten([o[1] for o in out]),
+                 "count": count})
+
+    return Optimizer("adafactor", init, update, state_bytes_per_param=0.01)

@@ -1,0 +1,35 @@
+"""Adagrad (Duchi et al., 2010) — paper Tables 8-12 baseline."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import Optimizer, clip_by_global_norm
+
+
+def adagrad(eps: float = 1e-10, weight_decay: float = 0.0,
+            grad_clip: float = 0.0) -> Optimizer:
+    def init(params):
+        return {
+            "accum": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, lr):
+        grads = clip_by_global_norm(grads, grad_clip)
+
+        def upd(p, g, a):
+            g32 = g.astype(jnp.float32) + weight_decay * p.astype(jnp.float32)
+            a_ = a + jnp.square(g32)
+            step = lr * g32 / (jnp.sqrt(a_) + eps)
+            return (p.astype(jnp.float32) - step).astype(p.dtype), a_
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_a = treedef.flatten_up_to(state["accum"])
+        out = [upd(p, g, a) for p, g, a in zip(flat_p, flat_g, flat_a)]
+        return (treedef.unflatten([o[0] for o in out]),
+                {"accum": treedef.unflatten([o[1] for o in out]),
+                 "count": state["count"] + 1})
+
+    return Optimizer("adagrad", init, update, state_bytes_per_param=4.0)

@@ -1,0 +1,54 @@
+"""Optimizer substrate: optax-like (init, update) pairs in pure JAX.
+
+``update(grads, state, params, lr)`` returns ``(new_params, new_state)``.
+The learning rate is an explicit scalar argument because HiFT's *delayed*
+schedule advances it once per group-cycle, outside the optimizer.
+
+All optimizers are pytree-polymorphic: state mirrors the param tree, so a
+HiFT per-group step can hold state for just its group's sub-tree — this is
+the mechanism behind the paper's k-fold optimizer-state memory reduction.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class Optimizer(NamedTuple):
+    name: str
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree, jnp.ndarray], tuple[PyTree, PyTree]]
+    # bytes of optimizer state per fp32 parameter (for the analytical memory
+    # model of paper Appendix B; adafactor is sub-linear and reports ~0).
+    state_bytes_per_param: float = 0.0
+
+
+def _tmap(f, *trees):
+    return jax.tree.map(f, *trees)
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> PyTree:
+    if max_norm is None or max_norm <= 0:
+        return grads
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+    gnorm = jnp.sqrt(sq)
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-12))
+    return _tmap(lambda g: (g * scale).astype(g.dtype), grads)
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    momentum: float = 0.9  # SGDM
+    grad_clip: float = 1.0
+    # MeZO
+    mezo_eps: float = 1e-3

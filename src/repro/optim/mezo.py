@@ -1,0 +1,48 @@
+"""MeZO (Malladi et al., 2023) — the paper's gradient-free baseline.
+
+SPSA estimator: sample z ~ N(0, I) (regenerated from a seed, never stored),
+evaluate the loss at theta + eps*z and theta - eps*z (two forward passes, no
+backward), and step theta -= lr * (L+ - L-)/(2 eps) * z.
+
+Memory: no gradients, no optimizer moments — only the params themselves.
+This is the baseline HiFT beats on *quality* while approaching it on memory.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def _perturb(params: PyTree, key, eps: float, sign: float) -> PyTree:
+    leaves, treedef = jax.tree.flatten(params)
+    keys = jax.random.split(key, len(leaves))
+    out = [
+        p + sign * eps * jax.random.normal(k, p.shape, jnp.float32).astype(p.dtype)
+        for p, k in zip(leaves, keys)
+    ]
+    return treedef.unflatten(out)
+
+
+def mezo_step(loss_fn: Callable[[PyTree, Any], jnp.ndarray], params: PyTree,
+              batch: Any, key, lr: jnp.ndarray, eps: float = 1e-3) -> tuple[PyTree, jnp.ndarray]:
+    """One MeZO step.  ``loss_fn(params, batch) -> scalar``.
+
+    The same ``key`` regenerates z for +eps, -eps and the update, so z never
+    materializes as persistent state (paper: MeZO memory ~= inference).
+    """
+    lplus = loss_fn(_perturb(params, key, eps, +1.0), batch)
+    lminus = loss_fn(_perturb(params, key, eps, -1.0), batch)
+    ghat = (lplus - lminus) / (2.0 * eps)
+
+    leaves, treedef = jax.tree.flatten(params)
+    keys = jax.random.split(key, len(leaves))
+    new = [
+        (p.astype(jnp.float32)
+         - lr * ghat * jax.random.normal(k, p.shape, jnp.float32)).astype(p.dtype)
+        for p, k in zip(leaves, keys)
+    ]
+    return treedef.unflatten(new), 0.5 * (lplus + lminus)

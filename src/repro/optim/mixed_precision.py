@@ -1,0 +1,56 @@
+"""Mixed-precision policies.
+
+``Policy`` controls three dtypes (params / compute / output).  Two HiFT-
+specific variants from the paper:
+
+- ``mixed``    : bf16 compute, fp32 master weights for ALL params resident
+                 (paper's standard mixed precision — §G.2 notes this can use
+                 MORE memory than fp32 FPFT for big models).
+- ``mixed_hi`` : bf16 compute params resident; **fp32 master copy only for
+                 the active HiFT group** (paper's "adapted mixed precision",
+                 the Mixed^Hi rows of Tables 8-12, and the mechanism behind
+                 "7B FPFT in 24GB").
+
+On TPU the inactive master copies live in pinned host memory; on this CPU
+container the placement is simulated by the memory model + kept on host.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.pytree import tree_cast
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    name: str = "fp32"
+    param_dtype: jnp.dtype = jnp.float32
+    compute_dtype: jnp.dtype = jnp.float32
+    output_dtype: jnp.dtype = jnp.float32
+    master_fp32: bool = False          # keep fp32 master weights
+    master_active_group_only: bool = False  # Mixed^Hi
+
+    def cast_params_for_compute(self, params):
+        return tree_cast(params, self.compute_dtype)
+
+    def cast_output(self, x):
+        return x.astype(self.output_dtype)
+
+
+FP32 = Policy("fp32")
+MIXED = Policy("mixed", param_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16,
+               output_dtype=jnp.float32, master_fp32=True)
+MIXED_HI = Policy("mixed_hi", param_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16,
+                  output_dtype=jnp.float32, master_fp32=True,
+                  master_active_group_only=True)
+BF16 = Policy("bf16", param_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16,
+              output_dtype=jnp.float32)
+
+POLICIES = {p.name: p for p in (FP32, MIXED, MIXED_HI, BF16)}
+
+
+def get_policy(name: str) -> Policy:
+    return POLICIES[name]

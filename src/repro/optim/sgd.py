@@ -1,0 +1,56 @@
+"""SGD and SGD-with-momentum (paper Table 5 / Tables 8-12 baselines)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import Optimizer, clip_by_global_norm
+
+
+def sgd(weight_decay: float = 0.0, grad_clip: float = 0.0) -> Optimizer:
+    """Plain SGD: zero optimizer state (paper: #Sta == 0)."""
+
+    def init(params):
+        return {"count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        grads = clip_by_global_norm(grads, grad_clip)
+
+        def upd(p, g):
+            p32 = p.astype(jnp.float32)
+            step = lr * (g.astype(jnp.float32) + weight_decay * p32)
+            return (p32 - step).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, grads)
+        return new_params, {"count": state["count"] + 1}
+
+    return Optimizer("sgd", init, update, state_bytes_per_param=0.0)
+
+
+def sgdm(momentum: float = 0.9, weight_decay: float = 0.0,
+         grad_clip: float = 0.0) -> Optimizer:
+    """SGD with heavy-ball momentum: one moment per param (zeta_2 = zeta_1)."""
+
+    def init(params):
+        return {
+            "mu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, lr):
+        grads = clip_by_global_norm(grads, grad_clip)
+
+        def upd(p, g, mu):
+            g32 = g.astype(jnp.float32) + weight_decay * p.astype(jnp.float32)
+            mu_ = momentum * mu + g32
+            return (p.astype(jnp.float32) - lr * mu_).astype(p.dtype), mu_
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_mu = treedef.flatten_up_to(state["mu"])
+        out = [upd(p, g, mu) for p, g, mu in zip(flat_p, flat_g, flat_mu)]
+        return (treedef.unflatten([o[0] for o in out]),
+                {"mu": treedef.unflatten([o[1] for o in out]),
+                 "count": state["count"] + 1})
+
+    return Optimizer("sgdm", init, update, state_bytes_per_param=4.0)

@@ -1,0 +1,40 @@
+import jax
+import jax.numpy as jnp
+import pytest
+
+# Smoke tests and benches must see ONE device — the 512-device flag is set
+# only inside launch/dryrun.py (per spec).
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+def tiny_dense_cfg(**kw):
+    from repro.configs.base import ArchConfig
+    defaults = dict(name="tiny", family="dense", n_layers=4, d_model=64,
+                    n_heads=4, kv_heads=2, d_ff=128, vocab=256,
+                    block_q=16, block_k=16, ce_chunk=16)
+    defaults.update(kw)
+    return ArchConfig(**defaults)
+
+
+@pytest.fixture
+def dense_cfg():
+    return tiny_dense_cfg()
+
+
+def make_batch(cfg, batch=4, seq=64, seed=0, fixed_vocab=None):
+    k = jax.random.PRNGKey(seed)
+    v = fixed_vocab or cfg.vocab
+    t = jax.random.randint(k, (batch, seq), 0, v)
+    out = {"tokens": t, "labels": t}
+    if cfg.family == "encdec":
+        out["src_embeds"] = jax.random.normal(k, (batch, seq, cfg.d_model))
+    if cfg.family == "vlm":
+        out["vision_embeds"] = jax.random.normal(
+            k, (batch, cfg.vision_tokens, cfg.d_model))
+    return out

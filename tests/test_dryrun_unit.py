@@ -1,0 +1,71 @@
+"""Dry-run machinery unit tests (no 512-device compile here)."""
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES
+from repro.configs.registry import (ARCH_IDS, cell_supported, get_config,
+                                    input_specs)
+from repro.launch import costmodel
+from repro.launch.dryrun import collective_bytes_total, parse_collectives
+
+
+def test_cell_support_matrix():
+    rows = {a: [] for a in ARCH_IDS}
+    for a in ARCH_IDS:
+        cfg = get_config(a)
+        for s in SHAPES.values():
+            ok, why = cell_supported(cfg, s)
+            rows[a].append(ok)
+    # long_500k only for hybrid + xlstm
+    assert rows["zamba2_2_7b"][3] and rows["xlstm_1_3b"][3]
+    assert not rows["qwen2_0_5b"][3] and not rows["arctic_480b"][3]
+    # everything else runs everywhere
+    for a in ARCH_IDS:
+        assert all(rows[a][:3]), a
+
+
+def test_input_specs_shapes():
+    for a in ARCH_IDS:
+        cfg = get_config(a)
+        for s in SHAPES.values():
+            if not cell_supported(cfg, s)[0]:
+                continue
+            spec = input_specs(cfg, s)
+            assert all(isinstance(v, jax.ShapeDtypeStruct) for v in spec.values())
+            if s.kind == "decode":
+                assert spec["tokens"].shape == (s.global_batch, 1)
+
+
+def test_parse_collectives_counts_bytes():
+    hlo = """
+ENTRY %main (p0: f32[8,128]) -> f32[8,128] {
+  %ar = f32[8,128]{1,0} all-reduce(f32[8,128]{1,0} %p0), replica_groups={}
+  %ag = f32[16,128]{1,0} all-gather(f32[8,128]{1,0} %ar), dimensions={0}
+}
+%while_body_1 (p: f32[4]) -> f32[4] {
+  %ar2 = f32[4]{0} all-reduce(f32[4]{0} %p), replica_groups={}
+}
+"""
+    per_comp = parse_collectives(hlo)
+    assert per_comp["main"]["all-reduce"] == 8 * 128 * 4
+    assert per_comp["main"]["all-gather"] == 8 * 128 * 4
+    total, detail = collective_bytes_total(per_comp, layer_trip=10)
+    assert total == 8 * 128 * 4 * 2 + 4 * 4 * 10  # body x trip count
+
+
+def test_costmodel_sane():
+    for a in ARCH_IDS:
+        cfg = get_config(a)
+        rep = costmodel.train_cost(cfg, SHAPES["train_4k"], cut=cfg.n_layers // 2,
+                                   active_layers=1)
+        assert rep.flops > 0 and rep.hbm_bytes > 0
+        assert rep.model_flops > 0
+        d = costmodel.serve_cost(cfg, SHAPES["decode_32k"], "decode")
+        # decode must be far more memory- than compute-heavy
+        assert d.hbm_bytes / 819e9 > d.flops / 197e12, a
+
+
+def test_moe_active_params_discount():
+    cfg = get_config("deepseek_moe_16b")
+    total, active = costmodel.param_count(cfg)
+    assert active < 0.45 * total  # 6 of 64 experts active

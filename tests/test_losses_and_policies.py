@@ -1,0 +1,82 @@
+"""Chunked CE vs naive; mixed-precision policies; compressed DP training."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_batch, tiny_dense_cfg
+from repro.core import HiFTConfig, HiFTRunner, LRSchedule
+from repro.models import transformer as T
+from repro.models.losses import chunked_next_token_xent
+from repro.optim import make_optimizer
+from repro.optim.mixed_precision import BF16, FP32, MIXED_HI
+
+
+def test_ce_chunk_non_divisible_seq_falls_to_divisor():
+    """s=3840-style non-divisible seq must still chunk (never naive)."""
+    h = jax.random.normal(jax.random.PRNGKey(0), (2, 30, 8))
+    w = jax.random.normal(jax.random.PRNGKey(1), (8, 32))
+    labels = jax.random.randint(jax.random.PRNGKey(2), (2, 30), 0, 32)
+    l1 = chunked_next_token_xent(h, w, labels, chunk=None)
+    l2 = chunked_next_token_xent(h, w, labels, chunk=7)  # 30 % 7 != 0 -> 6
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-5)
+
+
+def test_ce_ignores_masked_targets():
+    h = jax.random.normal(jax.random.PRNGKey(0), (1, 8, 4))
+    w = jax.random.normal(jax.random.PRNGKey(1), (4, 16))
+    labels = jnp.array([[1, 2, 3, -1, -1, -1, -1, -1]], jnp.int32)
+    l = chunked_next_token_xent(h, w, labels, chunk=None)
+    # only positions 0,1 have valid next-token targets (2, 3)
+    assert jnp.isfinite(l)
+
+
+@pytest.mark.parametrize("policy", [FP32, BF16, MIXED_HI])
+def test_policies_train(policy):
+    cfg = tiny_dense_cfg(ce_chunk=0)
+    params = T.init(cfg, jax.random.PRNGKey(0))
+    r = HiFTRunner(cfg, params, make_optimizer("adamw"), HiFTConfig(m=2),
+                   LRSchedule(base_lr=1e-3), policy=policy)
+    batch = make_batch(cfg, batch=2, seq=32)
+    losses = [float(r.train_step(batch)) for _ in range(r.k)]
+    assert np.isfinite(losses).all()
+    leaf = jax.tree.leaves(r.params)[0]
+    if policy.name in ("bf16", "mixed_hi"):
+        assert leaf.dtype == jnp.bfloat16
+    else:
+        assert leaf.dtype == jnp.float32
+
+
+def test_mixed_hi_master_restores_precision():
+    """fp32 master in the bundle: repeated tiny updates must not be lost to
+    bf16 rounding (the whole point of the master copy)."""
+    cfg = tiny_dense_cfg(ce_chunk=0)
+    params = T.init(cfg, jax.random.PRNGKey(0))
+    r = HiFTRunner(cfg, params, make_optimizer("sgd"), HiFTConfig(m=100),
+                   LRSchedule(base_lr=1e-5), policy=MIXED_HI)
+    assert r.k == 1
+    batch = make_batch(cfg, batch=2, seq=32)
+    r.train_step(batch)
+    bundle = r.opt_states[0]
+    assert "master" in bundle
+    master_leaf = jax.tree.leaves(bundle["master"])[0]
+    assert master_leaf.dtype == jnp.float32
+
+
+def test_compressed_dp_gradients_close_to_exact():
+    """int8+error-feedback cross-pod reduction stays close to fp32 psum."""
+    from repro.dist.compress import (compress_with_feedback, dequantize_int8,
+                                     init_residuals)
+    key = jax.random.PRNGKey(3)
+    g_pods = [jax.random.normal(jax.random.PRNGKey(i), (64,)) for i in range(2)]
+    exact = (g_pods[0] + g_pods[1]) / 2
+    residuals = [jnp.zeros((64,)), jnp.zeros((64,))]
+    # one step of quantized exchange
+    total = jnp.zeros((64,))
+    for i in range(2):
+        q, s, residuals[i] = compress_with_feedback(g_pods[i], residuals[i])
+        total = total + dequantize_int8(q, s)
+    approx = total / 2
+    err = float(jnp.abs(approx - exact).max())
+    amax = float(jnp.abs(exact).max())
+    assert err < amax / 64  # int8 => ~1/254 relative per tensor

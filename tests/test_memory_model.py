@@ -1,0 +1,57 @@
+"""Analytical memory model vs paper Appendix B / Tables 8-12."""
+from functools import partial
+
+import jax
+import pytest
+
+from repro.configs.registry import get_config
+from repro.core.memory_model import analyze, paper_equation_check
+from repro.models import get_family
+
+
+def _shapes(arch):
+    cfg = get_config(arch)
+    fam = get_family(cfg)
+    return fam.unit_spec(cfg), jax.eval_shape(partial(fam.init, cfg),
+                                              jax.random.PRNGKey(0))
+
+
+def test_appendix_b_equations():
+    fpft, hift, saved = paper_equation_check(zeta1_gb=26.08, k=34)
+    assert abs(fpft - 4 * 26.08) < 1e-6
+    assert abs(hift - 37 / 34 * 26.08) < 1e-6
+    assert abs(saved - (fpft - hift)) < 1e-6
+
+
+def test_llama7b_table12_columns():
+    units, shapes = _shapes("llama2_7b")
+    f = analyze(shapes, units, optimizer="adamw", precision="fp32", mode="fpft")
+    h = analyze(shapes, units, optimizer="adamw", precision="fp32", mode="hift")
+    assert abs(f.para_mb - 25705) / 25705 < 0.02
+    assert abs(f.state_mb - 51410) / 51410 < 0.02
+    assert abs(h.grad_mb - 772) / 772 < 0.12
+    assert abs(h.state_mb - 1544) / 1544 < 0.12
+    mh = analyze(shapes, units, optimizer="adamw", precision="mixed_hi", mode="hift")
+    assert abs(mh.pgs_gb - 15.57) / 15.57 < 0.12   # paper Mixed^Hi #PGS
+
+
+def test_sgd_has_zero_state():
+    units, shapes = _shapes("roberta_base")
+    r = analyze(shapes, units, optimizer="sgd", precision="fp32", mode="hift")
+    assert r.state_mb == 0.0
+
+
+def test_adafactor_state_sublinear():
+    units, shapes = _shapes("llama2_7b")
+    r = analyze(shapes, units, optimizer="adafactor", precision="fp32", mode="fpft")
+    assert r.state_mb < 20  # paper: 10.82 MB
+    h = analyze(shapes, units, optimizer="adafactor", precision="fp32", mode="hift")
+    assert h.state_mb < 1   # paper: 0.33 MB
+
+
+@pytest.mark.parametrize("m", [1, 2, 4, 8])
+def test_memory_decreases_with_k(m):
+    units, shapes = _shapes("roberta_large")
+    r1 = analyze(shapes, units, optimizer="adamw", mode="hift", m=m)
+    r2 = analyze(shapes, units, optimizer="adamw", mode="hift", m=m * 2)
+    assert r2.pgs_gb >= r1.pgs_gb  # bigger groups -> more resident
