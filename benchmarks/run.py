@@ -1,5 +1,9 @@
 """Benchmark entry point: one module per paper table/figure.
 
+All training benchmarks build their drivers through the unified strategy
+registry (``repro.core.registry.make_runner``), so every row is produced by
+the same TrainState-in/TrainState-out step surface.
+
 Prints ``name,us_per_call,derived`` CSV rows.
 
   memory_table         -> paper Tables 8-12 + Appendix-B equations

@@ -1,6 +1,8 @@
 """Paper Table 5 analogue: wall-clock step time HiFT vs FPFT per optimizer,
 measured on CPU with a small model (relative ordering is the claim: HiFT's
-per-step compute shrinks because backward is cut below the active group)."""
+per-step compute shrinks because backward is cut below the active group).
+All runners come from the unified strategy registry; a MeZO row shows the
+gradient-free step cost (two forwards, no backward) for scale."""
 from __future__ import annotations
 
 import time
@@ -8,9 +10,8 @@ import time
 import jax
 
 from repro.configs.base import ArchConfig
-from repro.core import FPFTRunner, HiFTConfig, HiFTRunner, LRSchedule
+from repro.core import HiFTConfig, LRSchedule, make_runner
 from repro.models import transformer as T
-from repro.optim import make_optimizer
 
 
 def _cfg():
@@ -40,17 +41,24 @@ def run(csv=True):
     params = T.init(cfg, jax.random.PRNGKey(0))
     batch = _batch(cfg)
     rows = []
+    sched = LRSchedule(1e-4)
     for opt in ["adamw", "sgd"]:
-        f = FPFTRunner(cfg, params, make_optimizer(opt), LRSchedule(1e-4))
+        f = make_runner(cfg, "fpft", params=params, optimizer=opt,
+                        schedule=sched)
         tf = _time_steps(f, batch, warmup=2)
-        h = HiFTRunner(cfg, params, make_optimizer(opt), HiFTConfig(m=1),
-                       LRSchedule(1e-4))
+        h = make_runner(cfg, "hift", params=params, optimizer=opt,
+                        hift=HiFTConfig(m=1), schedule=sched)
         th = _time_steps(h, batch, n=h.k)
         rows.append((opt, tf, th))
         if csv:
             print(f"speed_table/fpft/{opt},{tf*1e6:.0f},steps_per_s={1/tf:.2f}")
             print(f"speed_table/hift/{opt},{th*1e6:.0f},steps_per_s={1/th:.2f};"
                   f"speedup_vs_fpft={tf/th:.2f}x")
+    mz = make_runner(cfg, "mezo", params=params, schedule=sched)
+    tm = _time_steps(mz, batch, warmup=2)
+    rows.append(("mezo", tm, tm))
+    if csv:
+        print(f"speed_table/mezo/-,{tm*1e6:.0f},steps_per_s={1/tm:.2f}")
     return rows
 
 

@@ -34,6 +34,16 @@ for opt in ["adamw", "sgdm", "sgd", "adafactor", "adagrad"]:
               f"{r.para_mb:>10.1f} {r.grad_mb:>9.1f} {r.state_mb:>9.1f} "
               f"{r.pgs_gb:>8.2f}")
 
+# the grouping the accountant priced is exactly what the live strategy runs:
+# building the strategy (static config only — no 7B params materialize)
+# confirms k and the per-group structure straight from the registry
+from repro.core import HiFTConfig, make_strategy
+from repro.optim import make_optimizer
+
+st = make_strategy("hift", cfg, make_optimizer("adamw"), hift=HiFTConfig(m=1))
+print(f"\nstrategy API: hift k={st.k} groups "
+      f"(first {st.groups[0].label()}, last {st.groups[-1].label()})")
+
 r = analyze(shapes, units, optimizer="adamw", precision="mixed_hi", mode="hift", m=1)
 print(f"\nMixed^Hi HiFT P+G+S = {r.pgs_gb:.2f} GB -> with measured residual "
       f"states (~19 GB at bs6/seq512, paper Table 12) total ~"

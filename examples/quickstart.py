@@ -1,23 +1,24 @@
-"""Quickstart: fine-tune a small LM with HiFT in ~30 lines.
+"""Quickstart: fine-tune a small LM in ~30 lines with the Strategy API.
+
+``repro.core.registry.make_runner(cfg, strategy=..., ...)`` is the canonical
+entry point: the same call builds HiFT (the paper's Algorithm 1), the FPFT
+baseline, gradient-free MeZO, or LiSA-style random layer sampling — all
+driven by the same ``TrainState``-in/``TrainState``-out step underneath
+(``runner.strategy.step(runner.state, batch)`` is the functional surface).
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import jax
-
 from repro.configs.base import ArchConfig
-from repro.core import HiFTConfig, HiFTRunner, LRSchedule
+from repro.core import HiFTConfig, LRSchedule, make_runner
 from repro.data.synthetic import DataConfig, PrefetchIterator, SyntheticLM
-from repro.models import transformer as T
-from repro.optim import make_optimizer
 
 cfg = ArchConfig(name="quickstart", family="dense", n_layers=4, d_model=128,
                  n_heads=4, kv_heads=2, d_ff=256, vocab=512,
                  block_q=32, block_k=32, ce_chunk=32)
 
-params = T.init(cfg, jax.random.PRNGKey(0))
-runner = HiFTRunner(
-    cfg, params,
-    optimizer=make_optimizer("adamw"),
+runner = make_runner(
+    cfg, strategy="hift",                         # or: fpft | mezo | lisa
+    optimizer="adamw",
     hift=HiFTConfig(m=1, strategy="bottom2up"),   # paper Algorithm 1
     schedule=LRSchedule(base_lr=2e-3),            # delayed per-cycle LR
 )

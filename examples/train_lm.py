@@ -1,7 +1,8 @@
-"""End-to-end driver: train a ~100M-parameter LM with HiFT for a few hundred
-steps with checkpoint/resume, on the synthetic Markov task.
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps
+with checkpoint/resume, on the synthetic Markov task, with any registered
+fine-tuning strategy.
 
-    PYTHONPATH=src python examples/train_lm.py [--steps 200] [--fpft]
+    PYTHONPATH=src python examples/train_lm.py [--steps 200] [--strategy fpft]
     # kill it at any point, rerun: resumes from the latest checkpoint.
 
 ~100M config: 8 layers x d_model 768 x ff 2048, vocab 32k (~106M params).
@@ -11,10 +12,9 @@ import argparse
 import jax
 
 from repro.configs.base import ArchConfig
-from repro.core import FPFTRunner, HiFTConfig, HiFTRunner, LRSchedule
+from repro.core import HiFTConfig, LiSAConfig, LRSchedule, make_runner, registry
 from repro.data.synthetic import DataConfig, PrefetchIterator, SyntheticLM
 from repro.models import transformer as T
-from repro.optim import make_optimizer
 from repro.train.loop import LoopConfig, train
 
 
@@ -24,9 +24,13 @@ def main():
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--m", type=int, default=2)
-    ap.add_argument("--strategy", default="bottom2up")
+    ap.add_argument("--strategy", default="hift",
+                    choices=registry.strategy_ids())
+    ap.add_argument("--order", default="bottom2up",
+                    help="HiFT group visit order")
     ap.add_argument("--optimizer", default="adamw")
-    ap.add_argument("--fpft", action="store_true")
+    ap.add_argument("--fpft", action="store_true",
+                    help="deprecated alias for --strategy fpft")
     ap.add_argument("--ckpt-dir", default="/tmp/hift_train_lm")
     args = ap.parse_args()
 
@@ -37,16 +41,19 @@ def main():
     n = sum(x.size for x in jax.tree.leaves(params))
     print(f"model: {n/1e6:.1f}M params")
 
-    if args.fpft:
-        runner = FPFTRunner(cfg, params, make_optimizer(args.optimizer),
-                            LRSchedule(base_lr=1e-3, kind="cosine",
-                                       total_cycles=args.steps))
-    else:
-        runner = HiFTRunner(cfg, params, make_optimizer(args.optimizer),
-                            HiFTConfig(m=args.m, strategy=args.strategy),
-                            LRSchedule(base_lr=1e-3, kind="cosine",
-                                       total_cycles=max(args.steps // 10, 1)))
-        print(f"HiFT: k={runner.k} groups of m={args.m}; "
+    strategy = "fpft" if args.fpft else args.strategy
+    # hift advances the LR once per sweep (delayed schedule); the others per step
+    cycles = max(args.steps // 10, 1) if strategy == "hift" else args.steps
+    kw = {"schedule": LRSchedule(base_lr=1e-3, kind="cosine",
+                                 total_cycles=cycles)}
+    if strategy == "hift":
+        kw["hift"] = HiFTConfig(m=args.m, strategy=args.order)
+    elif strategy == "lisa":
+        kw["lisa"] = LiSAConfig(m=args.m)
+    runner = make_runner(cfg, strategy, params=params,
+                         optimizer=args.optimizer, **kw)
+    if strategy in ("hift", "lisa"):
+        print(f"{strategy}: k={runner.k} groups of m={args.m}; "
               f"peak trainable {runner.peak_trainable_params()/1e6:.1f}M "
               f"({100*runner.peak_trainable_params()/n:.1f}%)")
 

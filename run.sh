@@ -1,0 +1,24 @@
+#!/usr/bin/env bash
+# Env wrapper for launchers and benchmarks (idiom per SNIPPETS.md):
+#
+#   ./run.sh -m repro.launch.train --arch smollm-360m --smoke --steps 20
+#   ./run.sh examples/quickstart.py
+#   ./run.sh -m pytest -x -q          # tier-1, with the wrapper env
+set -euo pipefail
+
+# faster malloc when available (TPU hosts); silently skipped elsewhere
+TCMALLOC=/usr/lib/x86_64-linux-gnu/libtcmalloc.so.4
+if [ -f "$TCMALLOC" ]; then
+  export LD_PRELOAD="$TCMALLOC"
+  export TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD=60000000000  # no numpy warnings
+fi
+
+export TF_CPP_MIN_LOG_LEVEL=4                 # no dataset/backend warnings
+# 8 host devices so sharding code paths exercise on CPU-only machines;
+# respect an explicit override (tests that need 1 device unset this)
+export XLA_FLAGS="${XLA_FLAGS:---xla_force_host_platform_device_count=8}"
+export JAX_ENABLE_X64=0
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+exec /usr/bin/env python3 "$@"

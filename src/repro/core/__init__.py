@@ -1,6 +1,18 @@
-"""HiFT core: the paper's contribution."""
+"""HiFT core: the paper's contribution + the unified Strategy API."""
 from repro.core.grouping import Group, make_groups, order_groups, split_params, merge_params, group_cut
 from repro.core.scheduler import LRSchedule
-from repro.core.hift import HiFTConfig, HiFTRunner, write_back
-from repro.core.fpft import FPFTRunner, build_fpft_step
+from repro.core.strategy import (TrainState, Strategy, Runner,
+                                 HiFTConfig, LiSAConfig, MeZOConfig,
+                                 HiFTStrategy, FPFTStrategy, LiSAStrategy,
+                                 MeZOStrategy, build_fpft_step, write_back,
+                                 host_put, device_put_async)
+from repro.core import registry
+from repro.core.registry import (get_strategy_cls, make_runner, make_strategy,
+                                 register_strategy)
+from repro.core.hift import HiFTRunner
+from repro.core.fpft import FPFTRunner
 from repro.core import memory_model
+
+# convenience snapshot of the built-ins; call registry.strategy_ids() for a
+# live view that includes strategies registered after import
+STRATEGY_IDS = registry.strategy_ids()

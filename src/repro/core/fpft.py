@@ -1,73 +1,27 @@
-"""Standard full-parameter fine-tuning step — the paper's FPFT baseline."""
+"""FPFT baseline — DEPRECATED shim over the unified Strategy API.
+
+``build_fpft_step`` and the strategy itself live in
+:mod:`repro.core.strategy`; new code should use
+``repro.core.registry.make_runner(cfg, strategy="fpft", ...)``."""
 from __future__ import annotations
 
 from typing import Any, Callable, Optional
 
-import jax
-import jax.numpy as jnp
-
-from repro.configs.base import ArchConfig
-from repro.common.pytree import tree_cast
 from repro.core.scheduler import LRSchedule
-from repro.models import get_family
+from repro.core.strategy import (FPFTStrategy, Runner,  # noqa: F401
+                                 build_fpft_step)
 from repro.optim.base import Optimizer
 from repro.optim.mixed_precision import FP32, Policy
 
 PyTree = Any
 
 
-def build_fpft_step(cfg: ArchConfig, optimizer: Optimizer,
-                    policy: Policy = FP32,
-                    loss_fn: Optional[Callable] = None) -> Callable:
-    """Returns jitted ``step(params, opt_state, batch, lr) ->
-    (new_params, new_opt_state, loss)`` updating ALL parameters."""
-    model = get_family(cfg)
-    loss_fn = loss_fn or model.loss_fn
+class FPFTRunner(Runner):
+    """Mirror of HiFTRunner for the baseline (legacy constructor)."""
 
-    def step(params, opt_state, batch, lr):
-        def loss_of(p):
-            return loss_fn(cfg, p, batch, compute_dtype=policy.compute_dtype)
-
-        loss, grads = jax.value_and_grad(loss_of)(params)
-        new_params, new_state = optimizer.update(grads, opt_state, params, lr)
-        return new_params, new_state, loss
-
-    donate = () if jax.devices()[0].platform == "cpu" else (0, 1)
-    return jax.jit(step, donate_argnums=donate)
-
-
-class FPFTRunner:
-    """Mirror of HiFTRunner for the baseline (same driver API)."""
-
-    def __init__(self, cfg: ArchConfig, params: PyTree, optimizer: Optimizer,
-                 schedule: LRSchedule = LRSchedule(), policy: Policy = FP32,
+    def __init__(self, cfg, params: PyTree, optimizer: Optimizer,
+                 schedule: Optional[LRSchedule] = None, policy: Policy = FP32,
                  loss_fn: Optional[Callable] = None):
-        self.cfg = cfg
-        self.optimizer = optimizer
-        self.schedule = schedule
-        self.policy = policy
-        if policy.name in ("bf16",):
-            params = tree_cast(params, policy.param_dtype)
-        self.params = params
-        self.opt_state = optimizer.init(params)
-        self.step_count = 0
-        self.k = 1
-        self._step = build_fpft_step(cfg, optimizer, policy, loss_fn)
-
-    def train_step(self, batch) -> jnp.ndarray:
-        lr = jnp.asarray(self.schedule.at_cycle(self.step_count), jnp.float32)
-        self.params, self.opt_state, loss = self._step(
-            self.params, self.opt_state, batch, lr)
-        self.step_count += 1
-        return loss
-
-    def state_dict(self) -> dict:
-        import numpy as np
-        return {"params": self.params, "opt_state": self.opt_state,
-                "step_count": np.int64(self.step_count)}
-
-    def load_state_dict(self, state: dict) -> None:
-        import numpy as np
-        self.params = state["params"]
-        self.opt_state = state["opt_state"]
-        self.step_count = int(np.asarray(state["step_count"]))
+        strategy = FPFTStrategy(cfg, optimizer, schedule=schedule,
+                                policy=policy, loss_fn=loss_fn)
+        super().__init__(strategy, params)

@@ -1,219 +1,35 @@
-"""HiFT runner — the paper's Algorithm 1 as k specialized jitted steps.
+"""HiFT runner — DEPRECATED shim over the unified Strategy API.
 
-Per training step exactly ONE group is active:
-  - gradients exist only for the active group's sub-tree (jax.grad w.r.t. it),
-  - the backward graph is cut below the group (stop_gradient at the model's
-    ``cut`` depth -> XLA never materializes cotangents for shallow layers),
-  - optimizer state exists only for the active group (k-fold reduction),
-  - inactive groups' optimizer state stays off the accelerator
-    (pinned-host placement on TPU; host arrays on the CPU runtime),
-  - the learning rate advances once per full sweep (delayed schedule).
+The paper's Algorithm 1 now lives in :class:`repro.core.strategy.HiFTStrategy`
+(k specialized jitted steps, per-group optimizer bundles, host offload,
+Mixed^Hi masters); new code should build runners through
+``repro.core.registry.make_runner(cfg, strategy="hift", ...)``.
 
-Mixed^Hi (paper §G.2): params live in bf16; an fp32 master copy exists ONLY
-for the active group, carried inside that group's optimizer-state bundle.
-"""
+This module keeps the historical construction signature alive for existing
+callers and re-exports the helpers that used to be defined here."""
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Callable, Optional
 
-import jax
-import jax.numpy as jnp
-
-from repro.configs.base import ArchConfig
-from repro.common.pytree import tree_cast, tree_size
-from repro.core.grouping import (Group, group_cut, make_groups, merge_params,
-                                 order_groups, split_params)
 from repro.core.scheduler import LRSchedule
-from repro.models import get_family, unit_first_depth
+from repro.core.strategy import (HiFTConfig, HiFTStrategy, Runner,  # noqa: F401
+                                 device_put_async, host_put, write_back)
 from repro.optim.base import Optimizer
 from repro.optim.mixed_precision import FP32, Policy
 
 PyTree = Any
 
 
-def host_put(tree: PyTree) -> PyTree:
-    """Move a pytree to host memory (the paper's MoveOptimizerState2CPU).
+class HiFTRunner(Runner):
+    """End-to-end hierarchical fine-tuning driver (legacy constructor)."""
 
-    On TPU this uses the pinned_host memory kind so the transfer back is an
-    async DMA; on the CPU backend arrays are already host-resident."""
-    try:
-        dev = jax.devices()[0]
-        if dev.platform == "cpu":
-            return tree
-        sharding = jax.sharding.SingleDeviceSharding(dev, memory_kind="pinned_host")
-        return jax.device_put(tree, sharding)
-    except Exception:
-        return tree
-
-
-def device_put_async(tree: PyTree) -> PyTree:
-    """MoveOptimizerState2GPU analogue — dispatches async, overlaps forward."""
-    dev = jax.devices()[0]
-    if dev.platform == "cpu":
-        return tree
-    return jax.device_put(tree, jax.sharding.SingleDeviceSharding(dev))
-
-
-@dataclasses.dataclass
-class HiFTConfig:
-    m: int = 1                        # layers (units) per group
-    strategy: str = "bottom2up"       # bottom2up | top2down | random
-    seed: int = 0
-    use_cut: bool = True              # stop_gradient below the active group
-    offload_optimizer: bool = True    # keep inactive opt state on host
-    fused_adamw: bool = False         # route update through the Pallas kernel
-
-
-class HiFTRunner:
-    """End-to-end hierarchical fine-tuning driver."""
-
-    def __init__(self, cfg: ArchConfig, params: PyTree, optimizer: Optimizer,
-                 hift: HiFTConfig = HiFTConfig(),
-                 schedule: LRSchedule = LRSchedule(),
+    def __init__(self, cfg, params: PyTree, optimizer: Optimizer,
+                 hift: Optional[HiFTConfig] = None,
+                 schedule: Optional[LRSchedule] = None,
                  policy: Policy = FP32,
                  mesh=None, param_sharding_fn: Optional[Callable] = None,
                  loss_fn: Optional[Callable] = None):
-        self.cfg = cfg
-        self.model = get_family(cfg)
-        self.optimizer = optimizer
-        self.hift = hift
-        self.schedule = schedule
-        self.policy = policy
-        self.mesh = mesh
-        self.loss_fn = loss_fn or self.model.loss_fn
-
-        self.units = self.model.unit_spec(cfg)
-        self.groups = make_groups(self.units, hift.m)
-        self.k = len(self.groups)
-        self.order = order_groups(self.groups, hift.strategy, hift.seed)
-        self.step_count = 0
-
-        # param residency dtype per policy
-        if policy.master_active_group_only:       # Mixed^Hi
-            self.params = tree_cast(params, jnp.bfloat16)
-        elif policy.master_fp32 or policy.name == "fp32":
-            self.params = params                  # fp32 master resident
-        else:                                     # pure bf16
-            self.params = tree_cast(params, policy.param_dtype)
-
-        self.opt_states: dict[int, PyTree] = {}   # lazy per-group bundles
-        self._step_fns: dict[int, Callable] = {}
-
-    # ------------------------------------------------------------- plumbing
-
-    def group_for_step(self, step: Optional[int] = None) -> Group:
-        step = self.step_count if step is None else step
-        return self.groups[self.order[step % self.k]]
-
-    def lr_for_step(self, step: Optional[int] = None) -> float:
-        step = self.step_count if step is None else step
-        return self.schedule.delayed(step, self.k)
-
-    def _cut(self, group: Group) -> Optional[int]:
-        if not self.hift.use_cut:
-            return None
-        return group_cut(self.cfg, group, unit_first_depth)
-
-    def _init_bundle(self, active: PyTree) -> PyTree:
-        """Optimizer-state bundle for a group (paper: created on first visit)."""
-        if self.policy.master_active_group_only:
-            master = tree_cast(active, jnp.float32)
-            return {"opt": self.optimizer.init(master), "master": master}
-        return {"opt": self.optimizer.init(active)}
-
-    def build_step(self, gi: int) -> Callable:
-        """The jitted per-group train step (k of these exist)."""
-        group = self.groups[gi]
-        cut = self._cut(group)
-        cfg, model, opt, policy = self.cfg, self.model, self.optimizer, self.policy
-        loss_fn = self.loss_fn
-
-        def step(active, frozen, bundle, batch, lr):
-            def loss_of(a):
-                full = merge_params(a, frozen, group)
-                return loss_fn(cfg, full, batch, cut=cut,
-                               compute_dtype=policy.compute_dtype)
-
-            loss, grads = jax.value_and_grad(loss_of)(active)
-            if policy.master_active_group_only:
-                master, st = bundle["master"], bundle["opt"]
-                new_master, new_st = opt.update(grads, st, master, lr)
-                new_active = tree_cast(new_master, policy.param_dtype)
-                return new_active, {"opt": new_st, "master": new_master}, loss
-            new_active, new_st = opt.update(grads, bundle["opt"], active, lr)
-            return new_active, {"opt": new_st}, loss
-
-        donate = () if jax.devices()[0].platform == "cpu" else (0, 2)
-        return jax.jit(step, donate_argnums=donate)
-
-    def _fn(self, gi: int) -> Callable:
-        if gi not in self._step_fns:
-            self._step_fns[gi] = self.build_step(gi)
-        return self._step_fns[gi]
-
-    # ----------------------------------------------------------------- step
-
-    def train_step(self, batch) -> jnp.ndarray:
-        gi = self.order[self.step_count % self.k]
-        group = self.groups[gi]
-        active, frozen = split_params(self.params, group)
-
-        if gi not in self.opt_states:
-            bundle = self._init_bundle(active)
-        else:
-            bundle = self.opt_states[gi]
-            if self.hift.offload_optimizer:
-                bundle = device_put_async(bundle)  # host -> device, overlaps fwd
-
-        lr = jnp.asarray(self.lr_for_step(), jnp.float32)
-        new_active, new_bundle, loss = self._fn(gi)(active, frozen, bundle, batch, lr)
-
-        if self.hift.offload_optimizer:
-            new_bundle = host_put(new_bundle)      # device -> host
-        self.opt_states[gi] = new_bundle
-        self.params = write_back(self.params, new_active, group)
-        self.step_count += 1
-        return loss
-
-    # ------------------------------------------------------------ metrics
-
-    def peak_trainable_params(self) -> int:
-        """Max #params trainable in any single step (paper Fig. 6e)."""
-        return max(tree_size(split_params(self.params, g)[0]) for g in self.groups)
-
-    def total_params(self) -> int:
-        return tree_size(self.params)
-
-    # --------------------------------------------------------- checkpointing
-
-    def state_dict(self) -> dict:
-        import numpy as np
-        return {
-            "params": self.params,
-            "opt_states": {str(k): v for k, v in self.opt_states.items()},
-            "step_count": np.int64(self.step_count),
-            "order": np.asarray(self.order, np.int64),
-        }
-
-    def load_state_dict(self, state: dict) -> None:
-        import numpy as np
-        self.params = state["params"]
-        self.opt_states = {int(k): v for k, v in state.get("opt_states", {}).items()}
-        self.step_count = int(np.asarray(state["step_count"]))
-        self.order = [int(x) for x in np.asarray(state["order"]).reshape(-1)]
-
-
-def write_back(params: PyTree, new_active: PyTree, group: Group) -> PyTree:
-    """Fold the updated active sub-tree back into the full param tree."""
-    taken_stacked = {k: (lo, hi) for k, lo, hi in group.stacked_ranges}
-    out = dict(params)
-    for key, sub in new_active.items():
-        if key in taken_stacked:
-            lo, _ = taken_stacked[key]
-            out[key] = jax.tree.map(
-                lambda full, s: jax.lax.dynamic_update_slice_in_dim(full, s, lo, axis=0),
-                params[key], sub)
-        else:
-            out[key] = sub
-    return out
+        strategy = HiFTStrategy(cfg, optimizer, hift=hift, schedule=schedule,
+                                policy=policy, loss_fn=loss_fn, mesh=mesh,
+                                param_sharding_fn=param_sharding_fn)
+        super().__init__(strategy, params)

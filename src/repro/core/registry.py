@@ -1,0 +1,76 @@
+"""Fine-tuning strategy registry (mirrors ``repro.configs.registry``).
+
+Strategies register themselves by name; :func:`make_runner` is the canonical
+entry point for building a training driver:
+
+    runner = make_runner(cfg, strategy="hift", optimizer="adamw",
+                         hift=HiFTConfig(m=2), schedule=LRSchedule(2e-3))
+    loss = runner.train_step(batch)
+
+Everything downstream (train/loop.py, launch/train.py, dry-run, benchmarks,
+examples) programs against this surface; ``hift|fpft|mezo|lisa`` are the
+built-ins and future strategies (LOMO-style fused backward, sharded HiFT)
+plug in with one ``@register_strategy`` line.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+_REGISTRY: dict[str, type] = {}
+
+
+def register_strategy(name: str):
+    """Class decorator: add a Strategy class to the registry under ``name``."""
+    def deco(cls):
+        _REGISTRY[name] = cls
+        return cls
+    return deco
+
+
+def _ensure_loaded() -> None:
+    # the built-ins register as an import side effect
+    from repro.core import strategy  # noqa: F401
+
+
+def strategy_ids() -> list[str]:
+    _ensure_loaded()
+    return sorted(_REGISTRY)
+
+
+def get_strategy_cls(name: str) -> type:
+    _ensure_loaded()
+    if name not in _REGISTRY:
+        raise ValueError(f"unknown strategy {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def make_strategy(name: str, cfg, optimizer, **kwargs):
+    """Build a Strategy instance (static config only — no training state)."""
+    return get_strategy_cls(name)(cfg, optimizer, **kwargs)
+
+
+def make_runner(cfg, strategy: str = "hift", *, params: Any = None,
+                optimizer: Any = "adamw", rng: Any = None, seed: int = 0,
+                **kwargs):
+    """One factory for every fine-tuning strategy.
+
+    ``optimizer`` may be a name (resolved via ``repro.optim.make_optimizer``)
+    or an ``Optimizer``; ``params`` default to a fresh ``family.init`` from
+    ``seed``.  Remaining kwargs go to the strategy constructor (``schedule``,
+    ``policy``, ``loss_fn``, and per-strategy configs such as ``hift=``,
+    ``lisa=``, ``mezo=``).
+    """
+    import jax
+
+    from repro.core.strategy import Runner
+    from repro.models import get_family
+    from repro.optim import make_optimizer
+
+    if isinstance(optimizer, str):
+        optimizer = make_optimizer(optimizer)
+    if params is None:
+        params = get_family(cfg).init(cfg, jax.random.PRNGKey(seed))
+    if rng is None:
+        rng = jax.random.PRNGKey(seed)
+    return Runner(make_strategy(strategy, cfg, optimizer, **kwargs), params,
+                  rng=rng)

@@ -1,0 +1,579 @@
+"""Unified Strategy API: one functional surface for HiFT / FPFT / MeZO / LiSA.
+
+The paper's claim is that HiFT is an optimizer-independent *strategy*, not a
+bespoke trainer — this module makes strategies first-class:
+
+    strategy = make_strategy("hift", cfg, optimizer, hift=HiFTConfig(m=1))
+    state = strategy.init(params)                   # -> TrainState
+    state, metrics = strategy.step(state, batch)    # state-in / state-out
+
+Construction captures everything STATIC (config, model family, optimizer,
+jitted step cache); ALL training state — params, optimizer bundles, the step
+counter, HiFT's queue order, MeZO's rng — lives in the immutable
+:class:`TrainState` pytree, the one checkpointable object:
+``state.to_tree()`` round-trips through ``repro.train.checkpoint`` including
+HiFT's mid-sweep queue position.
+
+Built-in strategies (registered in ``repro.core.registry``):
+  - ``hift`` : the paper's Algorithm 1 — one group of m units per step in a
+               fixed visit order, per-group optimizer bundles, host offload,
+               Mixed^Hi fp32 masters for the active group only.
+  - ``fpft`` : the standard full-parameter baseline (all params every step).
+  - ``lisa`` : LiSA-style random layer sampling ("LISA: Layerwise Importance
+               Sampling", Pan et al. 2024) — the same grouped machinery as
+               HiFT, but the active group is re-SAMPLED every
+               ``switch_every`` steps instead of swept in a fixed order.
+  - ``mezo`` : zeroth-order SPSA (``repro.optim.mezo``) — no gradients, no
+               optimizer state; ``opt_state`` stays empty and the rng rides
+               in ``extra`` (the paper's memory floor baseline).
+
+:class:`Runner` is the thin mutable facade over ``(strategy, state)`` that
+driver loops use; ``repro.core.registry.make_runner`` is the factory.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.pytree import tree_cast, tree_size
+from repro.core.grouping import (Group, group_cut, make_groups, merge_params,
+                                 order_groups, split_params)
+from repro.core.registry import register_strategy
+from repro.core.scheduler import LRSchedule
+from repro.models import get_family, unit_first_depth
+from repro.optim.base import Optimizer
+from repro.optim.mezo import mezo_step
+from repro.optim.mixed_precision import FP32, Policy
+
+PyTree = Any
+Metrics = dict
+
+
+# --------------------------------------------------------------- placement
+
+def host_put(tree: PyTree) -> PyTree:
+    """Move a pytree to host memory (the paper's MoveOptimizerState2CPU).
+
+    On TPU this uses the pinned_host memory kind so the transfer back is an
+    async DMA; on the CPU backend arrays are already host-resident."""
+    try:
+        dev = jax.devices()[0]
+        if dev.platform == "cpu":
+            return tree
+        sharding = jax.sharding.SingleDeviceSharding(dev, memory_kind="pinned_host")
+        return jax.device_put(tree, sharding)
+    except Exception:
+        return tree
+
+
+def device_put_async(tree: PyTree) -> PyTree:
+    """MoveOptimizerState2GPU analogue — dispatches async, overlaps forward."""
+    dev = jax.devices()[0]
+    if dev.platform == "cpu":
+        return tree
+    return jax.device_put(tree, jax.sharding.SingleDeviceSharding(dev))
+
+
+def write_back(params: PyTree, new_active: PyTree, group: Group) -> PyTree:
+    """Fold the updated active sub-tree back into the full param tree."""
+    taken_stacked = {k: (lo, hi) for k, lo, hi in group.stacked_ranges}
+    out = dict(params)
+    for key, sub in new_active.items():
+        if key in taken_stacked:
+            lo, _ = taken_stacked[key]
+            out[key] = jax.tree.map(
+                lambda full, s: jax.lax.dynamic_update_slice_in_dim(full, s, lo, axis=0),
+                params[key], sub)
+        else:
+            out[key] = sub
+    return out
+
+
+# ----------------------------------------------------------------- configs
+
+@dataclasses.dataclass
+class HiFTConfig:
+    m: int = 1                        # layers (units) per group
+    strategy: str = "bottom2up"       # visit ORDER: bottom2up | top2down | random
+    seed: int = 0
+    use_cut: bool = True              # stop_gradient below the active group
+    offload_optimizer: bool = True    # keep inactive opt state on host
+    fused_adamw: bool = False         # route update through the Pallas kernel
+
+
+@dataclasses.dataclass
+class LiSAConfig:
+    m: int = 1                        # units per sampled group
+    switch_every: int = 5             # steps between re-sampling the group
+    seed: int = 0
+    use_cut: bool = True
+    offload_optimizer: bool = True
+
+
+@dataclasses.dataclass
+class MeZOConfig:
+    eps: float = 1e-3                 # SPSA perturbation scale
+    seed: int = 0                     # default rng when init() gets none
+
+
+# -------------------------------------------------------------- TrainState
+
+@dataclasses.dataclass(frozen=True)
+class TrainState:
+    """The one checkpointable object: immutable, pytree-registered.
+
+    ``opt_state`` layout is strategy-owned: FPFT holds one optimizer state
+    tree, grouped strategies hold ``{str(group_index): bundle}`` (string keys
+    so the path-keyed checkpoint codec round-trips it), MeZO holds ``{}``.
+    ``extra`` carries small strategy extras (HiFT visit order, MeZO rng)."""
+    params: PyTree
+    opt_state: PyTree
+    step: Any = 0
+    extra: PyTree = dataclasses.field(default_factory=dict)
+
+    def replace(self, **kw) -> "TrainState":
+        return dataclasses.replace(self, **kw)
+
+    def to_tree(self) -> dict:
+        """Plain dict-of-dicts view for the path-keyed checkpoint codec."""
+        return {"params": self.params, "opt_state": self.opt_state,
+                "step": np.int64(int(self.step)), "extra": self.extra}
+
+    @classmethod
+    def from_tree(cls, tree: dict) -> "TrainState":
+        if "step" not in tree and "step_count" in tree:
+            return cls._from_legacy_tree(tree)
+        return cls(params=tree["params"],
+                   opt_state=tree.get("opt_state") or {},
+                   step=int(np.asarray(tree["step"])),
+                   extra=tree.get("extra") or {})
+
+    @classmethod
+    def _from_legacy_tree(cls, tree: dict) -> "TrainState":
+        """Read pre-Strategy-API runner state_dicts ({params, opt_states |
+        opt_state, step_count[, order]}) so old checkpoints keep resuming."""
+        extra = {}
+        if "order" in tree:
+            extra["order"] = tree["order"]
+        opt_state = tree.get("opt_states")
+        if opt_state is None:
+            opt_state = tree.get("opt_state") or {}
+        return cls(params=tree["params"], opt_state=opt_state,
+                   step=int(np.asarray(tree["step_count"])), extra=extra)
+
+
+jax.tree_util.register_pytree_node(
+    TrainState,
+    lambda s: ((s.params, s.opt_state, s.step, s.extra), None),
+    lambda _, c: TrainState(*c))
+
+
+# ------------------------------------------------------------ Strategy base
+
+class Strategy:
+    """Protocol base.  Subclasses implement ``init`` and ``step``; both are
+    state-in/state-out — a strategy instance never mutates after __init__.
+
+    Purity caveat: on accelerator backends the jitted steps DONATE the
+    active param / optimizer buffers (the k-fold memory reduction depends on
+    it), so the input state is consumed — sequential drivers like ``Runner``
+    are unaffected, but re-stepping an old state is CPU-only."""
+
+    name = "base"
+    k = 1   # steps per LR cycle (HiFT: number of groups; others: 1)
+
+    def __init__(self, cfg, optimizer: Optional[Optimizer], *,
+                 schedule: Optional[LRSchedule] = None, policy: Policy = FP32,
+                 loss_fn: Optional[Callable] = None):
+        self.cfg = cfg
+        self.model = get_family(cfg)
+        self.optimizer = optimizer
+        self.schedule = schedule if schedule is not None else LRSchedule()
+        self.policy = policy
+        self.loss_fn = loss_fn or self.model.loss_fn
+
+    def init(self, params: PyTree, rng=None) -> TrainState:
+        raise NotImplementedError
+
+    def step(self, state: TrainState, batch) -> tuple[TrainState, Metrics]:
+        raise NotImplementedError
+
+    def lr_at(self, step: int) -> float:
+        return self.schedule.delayed(step, self.k)
+
+    def peak_trainable_params(self, params: PyTree) -> int:
+        """Max #params trainable in any single step (paper Fig. 6e)."""
+        return tree_size(params)
+
+
+# --------------------------------------------------- grouped-step machinery
+
+class _GroupedStrategy(Strategy):
+    """Shared machinery for strategies that train ONE Group per step
+    (HiFT's fixed sweep, LiSA's random sampling): per-group jitted steps,
+    lazy optimizer-state bundles, host offload, Mixed^Hi masters."""
+
+    use_cut = True
+    offload_optimizer = True
+
+    def _setup_groups(self, m: int) -> None:
+        self.units = self.model.unit_spec(self.cfg)
+        self.groups = make_groups(self.units, m)
+        self.k = len(self.groups)
+        self._step_fns: dict[int, Callable] = {}
+
+    def _cast_params(self, params: PyTree) -> PyTree:
+        policy = self.policy
+        if policy.master_active_group_only:       # Mixed^Hi
+            return tree_cast(params, jnp.bfloat16)
+        if policy.master_fp32 or policy.name == "fp32":
+            return params                         # fp32 master resident
+        return tree_cast(params, policy.param_dtype)
+
+    def _cut(self, group: Group) -> Optional[int]:
+        if not self.use_cut:
+            return None
+        return group_cut(self.cfg, group, unit_first_depth)
+
+    def _init_bundle(self, active: PyTree) -> PyTree:
+        """Optimizer-state bundle for a group (created on first visit)."""
+        if self.policy.master_active_group_only:
+            master = tree_cast(active, jnp.float32)
+            return {"opt": self.optimizer.init(master), "master": master}
+        return {"opt": self.optimizer.init(active)}
+
+    def build_step(self, gi: int) -> Callable:
+        """The jitted per-group train step (k of these exist)."""
+        group = self.groups[gi]
+        cut = self._cut(group)
+        cfg, opt, policy = self.cfg, self.optimizer, self.policy
+        loss_fn = self.loss_fn
+
+        def step(active, frozen, bundle, batch, lr):
+            def loss_of(a):
+                full = merge_params(a, frozen, group)
+                return loss_fn(cfg, full, batch, cut=cut,
+                               compute_dtype=policy.compute_dtype)
+
+            loss, grads = jax.value_and_grad(loss_of)(active)
+            if policy.master_active_group_only:
+                master, st = bundle["master"], bundle["opt"]
+                new_master, new_st = opt.update(grads, st, master, lr)
+                new_active = tree_cast(new_master, policy.param_dtype)
+                return new_active, {"opt": new_st, "master": new_master}, loss
+            new_active, new_st = opt.update(grads, bundle["opt"], active, lr)
+            return new_active, {"opt": new_st}, loss
+
+        donate = () if jax.devices()[0].platform == "cpu" else (0, 2)
+        return jax.jit(step, donate_argnums=donate)
+
+    def _fn(self, gi: int) -> Callable:
+        if gi not in self._step_fns:
+            self._step_fns[gi] = self.build_step(gi)
+        return self._step_fns[gi]
+
+    def _group_step(self, state: TrainState, batch, gi: int,
+                    lr: float) -> tuple[PyTree, PyTree, jnp.ndarray]:
+        group = self.groups[gi]
+        active, frozen = split_params(state.params, group)
+        key = str(gi)
+        bundle = state.opt_state.get(key)
+        if bundle is None:
+            bundle = self._init_bundle(active)
+        elif self.offload_optimizer:
+            bundle = device_put_async(bundle)  # host -> device, overlaps fwd
+        lr = jnp.asarray(lr, jnp.float32)
+        new_active, new_bundle, loss = self._fn(gi)(active, frozen, bundle,
+                                                    batch, lr)
+        if self.offload_optimizer:
+            new_bundle = host_put(new_bundle)   # device -> host
+        opt_state = dict(state.opt_state)
+        opt_state[key] = new_bundle
+        return write_back(state.params, new_active, group), opt_state, loss
+
+    def peak_trainable_params(self, params: PyTree) -> int:
+        return max(tree_size(split_params(params, g)[0]) for g in self.groups)
+
+    def group_at(self, state: TrainState, step: Optional[int] = None) -> Group:
+        raise NotImplementedError
+
+
+# ------------------------------------------------------------------- HiFT
+
+@register_strategy("hift")
+class HiFTStrategy(_GroupedStrategy):
+    """Paper Algorithm 1 as k specialized jitted steps.
+
+    Per training step exactly ONE group is active: gradients and optimizer
+    state exist only for its sub-tree, the backward graph is cut below it,
+    inactive bundles stay on host, and the LR advances once per sweep."""
+
+    name = "hift"
+
+    def __init__(self, cfg, optimizer, *, hift: Optional[HiFTConfig] = None,
+                 schedule: Optional[LRSchedule] = None, policy: Policy = FP32,
+                 loss_fn: Optional[Callable] = None, mesh=None,
+                 param_sharding_fn: Optional[Callable] = None):
+        super().__init__(cfg, optimizer, schedule=schedule, policy=policy,
+                         loss_fn=loss_fn)
+        self.hift = hift if hift is not None else HiFTConfig()
+        self.use_cut = self.hift.use_cut
+        self.offload_optimizer = self.hift.offload_optimizer
+        self.mesh = mesh
+        self.param_sharding_fn = param_sharding_fn
+        self._setup_groups(self.hift.m)
+        self.order = order_groups(self.groups, self.hift.strategy,
+                                  self.hift.seed)
+
+    def init(self, params: PyTree, rng=None) -> TrainState:
+        return TrainState(self._cast_params(params), {}, 0,
+                          {"order": np.asarray(self.order, np.int64)})
+
+    def _order_at(self, state: TrainState) -> list[int]:
+        # the visit order is state (it survives checkpoint/restore even when
+        # the restoring process was built with a different seed)
+        order = state.extra.get("order") if state.extra else None
+        if order is None:
+            return list(self.order)
+        return [int(x) for x in np.asarray(order).reshape(-1)]
+
+    def group_at(self, state: TrainState, step: Optional[int] = None) -> Group:
+        step = int(state.step) if step is None else step
+        return self.groups[self._order_at(state)[step % self.k]]
+
+    def step(self, state: TrainState, batch) -> tuple[TrainState, Metrics]:
+        step = int(state.step)
+        gi = self._order_at(state)[step % self.k]
+        lr = self.schedule.delayed(step, self.k)
+        params, opt_state, loss = self._group_step(state, batch, gi, lr)
+        new_state = TrainState(params, opt_state, step + 1, state.extra)
+        return new_state, {"loss": loss, "lr": lr, "strategy": self.name,
+                           "group": self.groups[gi].label()}
+
+
+# ------------------------------------------------------------------- LiSA
+
+@register_strategy("lisa")
+class LiSAStrategy(_GroupedStrategy):
+    """Random layer-subset fine-tuning, LiSA-style: every ``switch_every``
+    steps the active group is re-sampled uniformly (with replacement) instead
+    of swept in HiFT's fixed order.  The sample is a pure function of
+    ``(seed, step)``, so checkpoint resume replays the schedule exactly; the
+    per-group optimizer bundles persist across activations."""
+
+    name = "lisa"
+
+    def __init__(self, cfg, optimizer, *, lisa: Optional[LiSAConfig] = None,
+                 schedule: Optional[LRSchedule] = None, policy: Policy = FP32,
+                 loss_fn: Optional[Callable] = None):
+        super().__init__(cfg, optimizer, schedule=schedule, policy=policy,
+                         loss_fn=loss_fn)
+        self.lisa = lisa if lisa is not None else LiSAConfig()
+        self.use_cut = self.lisa.use_cut
+        self.offload_optimizer = self.lisa.offload_optimizer
+        self._setup_groups(self.lisa.m)
+
+    def lr_at(self, step: int) -> float:
+        # LiSA trains on a plain per-step schedule (no sweep structure)
+        return self.schedule.at_cycle(step)
+
+    def group_index_at(self, step: int) -> int:
+        period = step // max(self.lisa.switch_every, 1)
+        mix = (self.lisa.seed * 1_000_003 + period) % (2**31 - 1)
+        return int(np.random.RandomState(mix).randint(self.k))
+
+    def group_at(self, state: TrainState, step: Optional[int] = None) -> Group:
+        step = int(state.step) if step is None else step
+        return self.groups[self.group_index_at(step)]
+
+    def init(self, params: PyTree, rng=None) -> TrainState:
+        return TrainState(self._cast_params(params), {}, 0, {})
+
+    def step(self, state: TrainState, batch) -> tuple[TrainState, Metrics]:
+        step = int(state.step)
+        gi = self.group_index_at(step)
+        lr = self.lr_at(step)
+        params, opt_state, loss = self._group_step(state, batch, gi, lr)
+        new_state = TrainState(params, opt_state, step + 1, state.extra)
+        return new_state, {"loss": loss, "lr": lr, "strategy": self.name,
+                           "group": self.groups[gi].label()}
+
+
+# ------------------------------------------------------------------- FPFT
+
+def build_fpft_step(cfg, optimizer: Optimizer, policy: Policy = FP32,
+                    loss_fn: Optional[Callable] = None) -> Callable:
+    """Returns jitted ``step(params, opt_state, batch, lr) ->
+    (new_params, new_opt_state, loss)`` updating ALL parameters."""
+    model = get_family(cfg)
+    loss_fn = loss_fn or model.loss_fn
+
+    def step(params, opt_state, batch, lr):
+        def loss_of(p):
+            return loss_fn(cfg, p, batch, compute_dtype=policy.compute_dtype)
+
+        loss, grads = jax.value_and_grad(loss_of)(params)
+        new_params, new_state = optimizer.update(grads, opt_state, params, lr)
+        return new_params, new_state, loss
+
+    donate = () if jax.devices()[0].platform == "cpu" else (0, 1)
+    return jax.jit(step, donate_argnums=donate)
+
+
+@register_strategy("fpft")
+class FPFTStrategy(Strategy):
+    """Standard full-parameter fine-tuning — the paper's baseline."""
+
+    name = "fpft"
+
+    def __init__(self, cfg, optimizer, *, schedule: Optional[LRSchedule] = None,
+                 policy: Policy = FP32, loss_fn: Optional[Callable] = None):
+        super().__init__(cfg, optimizer, schedule=schedule, policy=policy,
+                         loss_fn=loss_fn)
+        self._step_fn: Optional[Callable] = None
+
+    def init(self, params: PyTree, rng=None) -> TrainState:
+        if self.policy.name in ("bf16",):
+            params = tree_cast(params, self.policy.param_dtype)
+        return TrainState(params, self.optimizer.init(params), 0, {})
+
+    def _fn(self) -> Callable:
+        if self._step_fn is None:
+            self._step_fn = build_fpft_step(self.cfg, self.optimizer,
+                                            self.policy, self.loss_fn)
+        return self._step_fn
+
+    def step(self, state: TrainState, batch) -> tuple[TrainState, Metrics]:
+        step = int(state.step)
+        lr = self.schedule.at_cycle(step)
+        params, opt_state, loss = self._fn()(
+            state.params, state.opt_state, batch, jnp.asarray(lr, jnp.float32))
+        new_state = TrainState(params, opt_state, step + 1, state.extra)
+        return new_state, {"loss": loss, "lr": lr, "strategy": self.name}
+
+
+# ------------------------------------------------------------------- MeZO
+
+@register_strategy("mezo")
+class MeZOStrategy(Strategy):
+    """Zeroth-order SPSA fine-tuning (MeZO, Malladi et al. 2023): two forward
+    passes, no backward, no optimizer state — memory ~= inference.  The z
+    noise is regenerated from ``fold_in(rng, step)`` so resume is exact."""
+
+    name = "mezo"
+
+    def __init__(self, cfg, optimizer=None, *, mezo: Optional[MeZOConfig] = None,
+                 schedule: Optional[LRSchedule] = None, policy: Policy = FP32,
+                 loss_fn: Optional[Callable] = None):
+        super().__init__(cfg, optimizer, schedule=schedule, policy=policy,
+                         loss_fn=loss_fn)
+        self.mezo = mezo if mezo is not None else MeZOConfig()
+        self._step_fn: Optional[Callable] = None
+
+    def init(self, params: PyTree, rng=None) -> TrainState:
+        if rng is None:
+            rng = jax.random.PRNGKey(self.mezo.seed)
+        return TrainState(params, {}, 0, {"rng": jnp.asarray(rng, jnp.uint32)})
+
+    def _fn(self) -> Callable:
+        if self._step_fn is None:
+            cfg, lf = self.cfg, self.loss_fn
+            cd, eps = self.policy.compute_dtype, self.mezo.eps
+
+            def loss_of(p, b):
+                return lf(cfg, p, b, compute_dtype=cd)
+
+            self._step_fn = jax.jit(
+                lambda p, b, k, lr: mezo_step(loss_of, p, b, k, lr, eps))
+        return self._step_fn
+
+    def step(self, state: TrainState, batch) -> tuple[TrainState, Metrics]:
+        step = int(state.step)
+        key = jax.random.fold_in(jnp.asarray(state.extra["rng"], jnp.uint32),
+                                 step)
+        lr = self.schedule.at_cycle(step)
+        params, loss = self._fn()(state.params, batch,
+                                  key, jnp.asarray(lr, jnp.float32))
+        new_state = TrainState(params, state.opt_state, step + 1, state.extra)
+        return new_state, {"loss": loss, "lr": lr, "strategy": self.name}
+
+
+# ------------------------------------------------------------------ Runner
+
+class Runner:
+    """Mutable facade over ``(strategy, TrainState)`` — the driver surface.
+
+    ``train/loop.py``, launchers, benchmarks and the legacy
+    ``HiFTRunner``/``FPFTRunner`` shims all program against this one class;
+    the functional API stays one attribute away (``runner.strategy``,
+    ``runner.state``)."""
+
+    def __init__(self, strategy: Strategy, params: PyTree, rng=None):
+        self.strategy = strategy
+        self.state = strategy.init(params, rng)
+        self.last_metrics: Metrics = {}
+
+    # ------------------------------------------------------------- views
+
+    @property
+    def params(self) -> PyTree:
+        return self.state.params
+
+    @property
+    def step_count(self) -> int:
+        return int(self.state.step)
+
+    @property
+    def k(self) -> int:
+        return self.strategy.k
+
+    @property
+    def opt_state(self) -> PyTree:
+        return self.state.opt_state
+
+    @property
+    def opt_states(self) -> PyTree:
+        """Grouped strategies: bundles keyed by int group index (legacy view)."""
+        os = self.state.opt_state
+        if isinstance(os, dict) and all(
+                isinstance(key, str) and key.isdigit() for key in os):
+            return {int(key): v for key, v in os.items()}
+        return os
+
+    # -------------------------------------------------------------- step
+
+    def train_step(self, batch) -> jnp.ndarray:
+        self.state, self.last_metrics = self.strategy.step(self.state, batch)
+        return self.last_metrics["loss"]
+
+    def lr_for_step(self, step: Optional[int] = None) -> float:
+        return self.strategy.lr_at(self.step_count if step is None else step)
+
+    def group_for_step(self, step: Optional[int] = None) -> Group:
+        return self.strategy.group_at(self.state, step)
+
+    # ----------------------------------------------------------- metrics
+
+    def peak_trainable_params(self) -> int:
+        return self.strategy.peak_trainable_params(self.state.params)
+
+    def total_params(self) -> int:
+        return tree_size(self.state.params)
+
+    # ----------------------------------------------------- checkpointing
+
+    def state_dict(self) -> dict:
+        return self.state.to_tree()
+
+    def load_state_dict(self, state: dict) -> None:
+        self.state = TrainState.from_tree(state)
+
+    def __getattr__(self, name: str):
+        # delegate static attributes (groups, order, units, cfg, hift, ...)
+        if name.startswith("_") or "strategy" not in self.__dict__:
+            raise AttributeError(name)
+        return getattr(self.__dict__["strategy"], name)

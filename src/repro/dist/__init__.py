@@ -1,0 +1,13 @@
+"""Distribution utilities: sharding context, placement rules, compression.
+
+- ``ctx``       : ambient activation-sharding context + constraint helpers
+                  (identity outside a context, so single-device tests and
+                  smoke runs pay nothing).
+- ``shardings`` : NamedSharding rules for params / optimizer state / batches
+                  / decode caches on the production (data, model) meshes.
+- ``compress``  : int8 quantization with error feedback for cross-pod
+                  gradient reduction over DCI.
+"""
+from repro.dist import compress, ctx, shardings
+
+__all__ = ["compress", "ctx", "shardings"]

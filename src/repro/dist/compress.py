@@ -1,0 +1,45 @@
+"""int8 gradient compression with error feedback.
+
+Cross-pod data parallelism reduces gradients over DCI, which is ~10x slower
+than ICI; symmetric per-tensor int8 cuts the wire bytes 4x.  Plain
+quantization biases the update, so the quantization error is carried as a
+per-pod *residual* and added back before the next quantization — over time
+the dequantized stream sums to the true gradient stream (error feedback /
+EF-SGD), which ``tests/test_properties.py`` asserts exactly.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def quantize_int8(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-tensor quantization: ``x ~= q * scale`` with q in
+    [-127, 127].  Round-to-nearest bounds the error by scale/2."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    scale = jnp.maximum(amax, jnp.float32(1e-30)) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_with_feedback(g: jnp.ndarray, residual: jnp.ndarray
+                           ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Quantize ``g + residual``; the new residual is what int8 could not
+    represent.  Returns ``(q, scale, new_residual)``."""
+    acc = g.astype(jnp.float32) + residual
+    q, scale = quantize_int8(acc)
+    new_residual = acc - dequantize_int8(q, scale)
+    return q, scale, new_residual
+
+
+def init_residuals(tree: PyTree) -> PyTree:
+    """Zero error-feedback residuals shaped like a gradient tree."""
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), tree)

@@ -1,0 +1,90 @@
+"""Ambient sharding context for activations.
+
+Model code calls :func:`constrain_layer_io` / :func:`constrain_tokens` /
+:func:`constrain_expert` unconditionally at layer boundaries; the functions
+are identity unless an :func:`activation_sharding` context is active (the
+dry-run and production launchers open one, unit tests never do).  This keeps
+GSPMD's propagation anchored — per-layer re-annotation stops the partitioner
+from drifting into replicated activations mid-stack — without threading a
+mesh through every model signature.
+
+``_STATE`` is trace-time state: it is read while jit traces the model, so
+the context must wrap ``.lower()`` / first call, not execution.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Optional, Sequence
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+_STATE: dict = {"mesh": None, "batch_axes": (), "model_axis": None}
+
+
+def active() -> bool:
+    return _STATE["mesh"] is not None
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh, batch_axes: Sequence[str],
+                        model_axis: Optional[str] = "model"):
+    """Activate activation-sharding: batch dims over ``batch_axes``, expert
+    dims over ``model_axis``.  Nestable; restores the previous state."""
+    if model_axis is not None and model_axis not in mesh.axis_names:
+        model_axis = None
+    prev = dict(_STATE)
+    _STATE.update(mesh=mesh, batch_axes=tuple(batch_axes), model_axis=model_axis)
+    try:
+        yield
+    finally:
+        _STATE.update(prev)
+
+
+def _axes_size(mesh, axes) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n = 1
+    for a in (axes if isinstance(axes, (tuple, list)) else (axes,)):
+        n *= sizes.get(a, 1)
+    return n
+
+
+def _constrain_leading(x, axes):
+    """Shard the leading dim of every array leaf over ``axes`` (replicated on
+    everything else); leaves whose leading dim does not divide are skipped."""
+    if not active() or not axes:
+        return x
+    mesh = _STATE["mesh"]
+    n = _axes_size(mesh, axes)
+    if n <= 1:
+        return x
+
+    def one(leaf):
+        if not hasattr(leaf, "ndim") or leaf.ndim < 2:
+            return leaf
+        if leaf.shape[0] % n != 0 or leaf.shape[0] < n:
+            return leaf
+        spec = P(axes if isinstance(axes, tuple) else (axes,),
+                 *([None] * (leaf.ndim - 1)))
+        return jax.lax.with_sharding_constraint(leaf, NamedSharding(mesh, spec))
+
+    return jax.tree.map(one, x)
+
+
+def constrain_layer_io(h: PyTree) -> PyTree:
+    """Residual-stream activations at layer boundaries: (B, S, D)-like leaves
+    get their batch dim pinned to the data axes."""
+    return _constrain_leading(h, _STATE["batch_axes"])
+
+
+def constrain_tokens(xt: PyTree) -> PyTree:
+    """Token-major activations, e.g. the (N, D) MoE dispatch view."""
+    return _constrain_leading(xt, _STATE["batch_axes"])
+
+
+def constrain_expert(buf: PyTree) -> PyTree:
+    """Expert-major buffers, e.g. the (E, C, D) MoE capacity buffer: the
+    expert dim shards over the model axis."""
+    return _constrain_leading(buf, _STATE["model_axis"])

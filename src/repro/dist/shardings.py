@@ -1,0 +1,122 @@
+"""NamedSharding placement rules for the production (data, model) meshes.
+
+Rules are deliberately structural (shape-driven, not name-driven) so they
+apply uniformly across every model family's param tree:
+
+- params / optimizer moments: the largest dim divisible by the model-axis
+  size shards over ``model`` (vocab for embeddings, d_ff for MLPs, heads
+  for attention); everything else replicates.  Stacked-layer leading dims
+  (n_layers) are never eligible because they are scanned, not partitioned.
+- batches: leading (batch) dim over the data axes (``pod`` folds into data).
+- decode caches: batch-like dim over data, then one feature dim over model.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+_MODEL_AXIS = "model"
+_DATA_AXES = ("pod", "data")
+
+
+def _sizes(mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _data_axes(mesh) -> tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in _DATA_AXES)
+
+
+def _model_dim(shape, size: int, skip: Optional[int] = None) -> Optional[int]:
+    """Largest dim divisible by the model-axis size (ties -> last dim)."""
+    best = None
+    for i, d in enumerate(shape):
+        if i == skip or d < size or d % size != 0:
+            continue
+        if best is None or d >= shape[best]:
+            best = i
+    return best
+
+
+def _named(mesh, ndim: int, dim_axes: dict[int, Any]) -> NamedSharding:
+    spec = [None] * ndim
+    for i, a in dim_axes.items():
+        spec[i] = a
+    return NamedSharding(mesh, P(*spec))
+
+
+def param_shardings(params: PyTree, mesh) -> PyTree:
+    """Tensor-parallel placement for a param (or param-shaped) tree."""
+    size = _sizes(mesh).get(_MODEL_AXIS, 1)
+
+    def one(leaf):
+        if size > 1 and getattr(leaf, "ndim", 0) >= 1:
+            # never shard a stacked-layer leading dim: it is scan-iterated
+            skip = 0 if leaf.ndim >= 3 else None
+            dim = _model_dim(leaf.shape, size, skip=skip)
+            if dim is not None:
+                return _named(mesh, leaf.ndim, {dim: _MODEL_AXIS})
+        return NamedSharding(mesh, P())
+
+    return jax.tree.map(one, params)
+
+
+def opt_state_shardings(state: PyTree, params: PyTree, mesh) -> PyTree:
+    """Optimizer state mirrors the param placement; moment tensors follow the
+    same structural rule, scalars (counts, factored stats) replicate."""
+    del params  # placement is structural, the template is not needed
+    return param_shardings(state, mesh)
+
+
+def batch_shardings(batch: PyTree, mesh) -> PyTree:
+    """Input batches: leading dim over the data axes, rest replicated."""
+    axes = _data_axes(mesh)
+    n = 1
+    for a in axes:
+        n *= _sizes(mesh)[a]
+
+    def one(leaf):
+        if axes and getattr(leaf, "ndim", 0) >= 1 and leaf.shape and \
+                leaf.shape[0] >= n and leaf.shape[0] % n == 0:
+            return _named(mesh, leaf.ndim, {0: axes})
+        return NamedSharding(mesh, P())
+
+    return jax.tree.map(one, batch)
+
+
+def cache_shardings(cache: PyTree, mesh) -> PyTree:
+    """Decode caches, layout-agnostic: leaves may be (n_layers, B, ...) or
+    (B, ...).  The first non-leading dim divisible by the data size takes the
+    data axes (the batch dim in layers-first layouts), then the largest
+    remaining dim divisible by the model size takes ``model`` (KV heads)."""
+    sizes = _sizes(mesh)
+    axes = _data_axes(mesh)
+    dsize = 1
+    for a in axes:
+        dsize *= sizes[a]
+    msize = sizes.get(_MODEL_AXIS, 1)
+
+    def one(leaf):
+        ndim = getattr(leaf, "ndim", 0)
+        if ndim < 2:
+            return NamedSharding(mesh, P())
+        dim_axes: dict[int, Any] = {}
+        if axes and dsize > 1:
+            for i in range(1, ndim):
+                if leaf.shape[i] >= dsize and leaf.shape[i] % dsize == 0:
+                    dim_axes[i] = axes
+                    break
+        if msize > 1:
+            taken = set(dim_axes) | {0}
+            cands = [i for i in range(ndim)
+                     if i not in taken and leaf.shape[i] >= msize
+                     and leaf.shape[i] % msize == 0]
+            if cands:
+                dim_axes[max(cands, key=lambda i: leaf.shape[i])] = _MODEL_AXIS
+        return _named(mesh, ndim, dim_axes) if dim_axes else NamedSharding(mesh, P())
+
+    return jax.tree.map(one, cache)

@@ -9,14 +9,15 @@ For each cell this proves, without real hardware:
   - the per-device memory fits (compiled.memory_analysis()),
   - the collective schedule is sane (parsed from the partitioned HLO).
 
-Train shapes lower the HiFT per-group step (the paper's technique); a
-``--fpft`` flag lowers the standard FPFT step for comparison.  Decode
-shapes lower ``serve_step`` (one token against a seq_len KV cache);
-prefill shapes lower the prompt pass.
+Train shapes lower the per-group HiFT step (the paper's technique);
+``--strategy fpft`` lowers the standard FPFT step for comparison (strategy
+names resolve through ``repro.core.registry``).  Decode shapes lower
+``serve_step`` (one token against a seq_len KV cache); prefill shapes lower
+the prompt pass.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --arch internlm2-1.8b --shape train_4k
-  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--fpft]
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--strategy fpft]
 Outputs one JSON per cell under experiments/dryrun/.
 """
 import argparse
@@ -146,8 +147,17 @@ def _abstract_params(cfg: ArchConfig, dtype=jnp.bfloat16):
     return jax.eval_shape(build, jax.random.PRNGKey(0))
 
 
-def lower_train_cell(cfg: ArchConfig, shape: ShapeConfig, mesh, fpft: bool = False):
-    """Build + lower + compile the HiFT (or FPFT) train step for a cell."""
+def lower_train_cell(cfg: ArchConfig, shape: ShapeConfig, mesh,
+                     strategy: str = "hift"):
+    """Build + lower + compile the train step of ``strategy`` for a cell.
+
+    Lowering needs abstract shapes and explicit shardings, so the cell step
+    is built here rather than through ``Strategy.step`` — but the step BODY
+    mirrors ``repro.core.strategy`` exactly (FPFTStrategy's full step; the
+    HiFT/Mixed^Hi per-group step with the paper's backward cut)."""
+    if strategy not in ("hift", "fpft"):
+        raise ValueError(f"dry-run lowers hift|fpft cells, got {strategy!r}")
+    fpft = strategy == "fpft"
     model = get_family(cfg)
     params_s = _abstract_params(cfg)
     opt = make_optimizer("adamw")
@@ -265,7 +275,7 @@ def lower_serve_cell(cfg: ArchConfig, shape: ShapeConfig, mesh):
 
 
 def run_cell(arch_id: str, shape_name: str, multi_pod: bool = False,
-             fpft: bool = False, save: bool = True) -> dict:
+             strategy: str = "hift", save: bool = True) -> dict:
     cfg = get_config(arch_id)
     shape = SHAPES[shape_name]
     ok, why = cell_supported(cfg, shape)
@@ -281,7 +291,7 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool = False,
     t0 = time.time()
     try:
         if shape.kind == "train":
-            lowered, meta = lower_train_cell(cfg, shape, mesh, fpft=fpft)
+            lowered, meta = lower_train_cell(cfg, shape, mesh, strategy=strategy)
         else:
             lowered, meta = lower_serve_cell(cfg, shape, mesh)
         compiled = lowered.compile()
@@ -371,8 +381,12 @@ def main():
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--both-meshes", action="store_true")
-    ap.add_argument("--fpft", action="store_true")
+    ap.add_argument("--strategy", default="hift", choices=["hift", "fpft"],
+                    help="which train step to lower for train cells")
+    ap.add_argument("--fpft", action="store_true",
+                    help="deprecated alias for --strategy fpft")
     args = ap.parse_args()
+    strategy = "fpft" if args.fpft else args.strategy
 
     meshes = [False, True] if args.both_meshes else [args.multi_pod]
     cells = []
@@ -387,7 +401,8 @@ def main():
         for mp in meshes:
             cells.append((args.arch, args.shape, mp))
 
-    results = [run_cell(a, s, multi_pod=mp, fpft=args.fpft) for a, s, mp in cells]
+    results = [run_cell(a, s, multi_pod=mp, strategy=strategy)
+               for a, s, mp in cells]
     n_ok = sum(r["status"] == "ok" for r in results)
     n_skip = sum(r["status"] == "skipped" for r in results)
     n_err = sum(r["status"] == "error" for r in results)

@@ -1,13 +1,14 @@
 """Production training launcher.
 
     PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --smoke \
-        --steps 20 --m 2 --strategy bottom2up --optimizer adamw
+        --steps 20 --strategy hift --m 2 --order bottom2up --optimizer adamw
 
-Selects any assigned architecture (--arch), builds the HiFT runner (or
---fpft baseline), wires the deterministic data pipeline, checkpointing and
-the straggler watchdog.  On a real TPU cluster this same entry point runs
-per-host under the (data, model) mesh; --mesh dxm places params with the
-dist.shardings rules (single CPU device here -> host mesh).
+Selects any assigned architecture (--arch) and any registered fine-tuning
+strategy (--strategy hift|fpft|mezo|lisa, resolved via
+``repro.core.registry``), wires the deterministic data pipeline,
+checkpointing and the straggler watchdog.  On a real TPU cluster this same
+entry point runs per-host under the (data, model) mesh; --mesh dxm places
+params with the dist.shardings rules (single CPU device here -> host mesh).
 """
 from __future__ import annotations
 
@@ -16,10 +17,10 @@ import argparse
 import jax
 
 from repro.configs.registry import ARCH_IDS, PAPER_IDS, get_config
-from repro.core import FPFTRunner, HiFTConfig, HiFTRunner, LRSchedule
+from repro.core import (HiFTConfig, LiSAConfig, LRSchedule, MeZOConfig,
+                        make_runner, registry)
 from repro.data.synthetic import DataConfig, PrefetchIterator, SyntheticLM
 from repro.models import get_family
-from repro.optim import make_optimizer
 from repro.optim.mixed_precision import get_policy
 from repro.train.loop import LoopConfig, train
 
@@ -33,14 +34,23 @@ def main(argv=None):
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=64)
-    ap.add_argument("--m", type=int, default=1)
-    ap.add_argument("--strategy", default="bottom2up",
-                    choices=["bottom2up", "top2down", "random"])
+    # resolved at parse time so late-registered strategies show up too
+    ap.add_argument("--strategy", default="hift",
+                    choices=registry.strategy_ids(),
+                    help="fine-tuning strategy (registry-resolved)")
+    ap.add_argument("--m", type=int, default=1,
+                    help="units per group (hift/lisa)")
+    ap.add_argument("--order", default="bottom2up",
+                    choices=["bottom2up", "top2down", "random"],
+                    help="HiFT group visit order")
+    ap.add_argument("--switch-every", type=int, default=5,
+                    help="LiSA re-sampling period")
     ap.add_argument("--optimizer", default="adamw")
     ap.add_argument("--policy", default="fp32",
                     choices=["fp32", "mixed", "mixed_hi", "bf16"])
     ap.add_argument("--lr", type=float, default=1e-3)
-    ap.add_argument("--fpft", action="store_true")
+    ap.add_argument("--fpft", action="store_true",
+                    help="deprecated alias for --strategy fpft")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--resume", default="none", choices=["none", "auto"])
     ap.add_argument("--seed", type=int, default=0)
@@ -52,16 +62,21 @@ def main(argv=None):
     n = sum(x.size for x in jax.tree.leaves(params))
     print(f"[{cfg.name}] {n/1e6:.1f}M params, family={cfg.family}")
 
+    strategy = "fpft" if args.fpft else args.strategy
     sched = LRSchedule(base_lr=args.lr, kind="cosine",
                        total_cycles=max(args.steps, 1))
-    if args.fpft:
-        runner = FPFTRunner(cfg, params, make_optimizer(args.optimizer), sched)
-    else:
-        runner = HiFTRunner(cfg, params, make_optimizer(args.optimizer),
-                            HiFTConfig(m=args.m, strategy=args.strategy,
-                                       seed=args.seed),
-                            sched, policy=get_policy(args.policy))
-        print(f"HiFT k={runner.k}, strategy={args.strategy}, "
+    kw = {"schedule": sched, "policy": get_policy(args.policy)}
+    if strategy == "hift":
+        kw["hift"] = HiFTConfig(m=args.m, strategy=args.order, seed=args.seed)
+    elif strategy == "lisa":
+        kw["lisa"] = LiSAConfig(m=args.m, switch_every=args.switch_every,
+                                seed=args.seed)
+    elif strategy == "mezo":
+        kw["mezo"] = MeZOConfig(seed=args.seed)
+    runner = make_runner(cfg, strategy, params=params,
+                         optimizer=args.optimizer, seed=args.seed, **kw)
+    if strategy in ("hift", "lisa"):
+        print(f"{strategy} k={runner.k}, "
               f"peak trainable {runner.peak_trainable_params()/1e6:.2f}M "
               f"({100*runner.peak_trainable_params()/n:.2f}%)")
 

@@ -21,11 +21,31 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+try:  # zstd preferred; stdlib zlib fallback keeps minimal containers working
+    import zstandard
+except ImportError:  # pragma: no cover - depends on environment
+    zstandard = None
+import zlib
 
 PyTree = Any
 
 _MANIFEST = "MANIFEST.json"
+
+
+def _compress(raw: bytes) -> bytes:
+    if zstandard is not None:
+        return zstandard.ZstdCompressor(level=3).compress(raw)
+    return b"ZLIB" + zlib.compress(raw, 3)
+
+
+def _decompress(blob: bytes) -> bytes:
+    if blob[:4] == b"ZLIB":
+        return zlib.decompress(blob[4:])
+    if zstandard is None:
+        raise RuntimeError("checkpoint is zstd-compressed but zstandard is "
+                           "not installed")
+    return zstandard.ZstdDecompressor().decompress(blob)
 
 
 def _encode_tree(tree: PyTree) -> bytes:
@@ -42,12 +62,12 @@ def _encode_tree(tree: PyTree) -> bytes:
         ],
     }
     raw = msgpack.packb(payload, use_bin_type=True)
-    return zstandard.ZstdCompressor(level=3).compress(raw)
+    return _compress(raw)
 
 
 def _decode_tree(blob: bytes) -> PyTree:
     from repro.common.pytree import unflatten_from_paths
-    raw = zstandard.ZstdDecompressor().decompress(blob)
+    raw = _decompress(blob)
     payload = msgpack.unpackb(raw, raw=False)
     flat = {}
     for p, l in zip(payload["paths"], payload["leaves"]):
@@ -114,6 +134,20 @@ def restore(ckpt_dir: str | Path, step: int, like: PyTree = None) -> PyTree:
     """Restore a path-keyed state tree (no template needed)."""
     path = Path(ckpt_dir) / f"step_{step}" / "state.msgpack.zst"
     return _decode_tree(path.read_bytes())
+
+
+def save_state(ckpt_dir: str | Path, step: int, state,
+               keep: int = 3, async_write: bool = False):
+    """TrainState-aware save: the Strategy API's one checkpointable object
+    serializes through its plain-dict view (incl. HiFT queue position)."""
+    return save(ckpt_dir, step, state.to_tree(), keep=keep,
+                async_write=async_write)
+
+
+def restore_state(ckpt_dir: str | Path, step: int):
+    """Inverse of :func:`save_state` — returns a ``TrainState``."""
+    from repro.core.strategy import TrainState
+    return TrainState.from_tree(restore(ckpt_dir, step))
 
 
 def restore_latest(ckpt_dir: str | Path, like: PyTree = None):

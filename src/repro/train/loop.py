@@ -62,7 +62,8 @@ class StragglerWatchdog:
 
 def train(runner, data_iter, loop_cfg: LoopConfig,
           on_step: Optional[Callable[[int, float], None]] = None) -> dict:
-    """Run ``runner`` (HiFTRunner or FPFTRunner) over a data iterator."""
+    """Run a strategy ``Runner`` (see ``repro.core.registry.make_runner``;
+    the legacy HiFTRunner/FPFTRunner shims work too) over a data iterator."""
     start_step = 0
     if loop_cfg.resume == "auto" and loop_cfg.ckpt_dir:
         step = ckpt.latest_step(loop_cfg.ckpt_dir)
@@ -75,6 +76,7 @@ def train(runner, data_iter, loop_cfg: LoopConfig,
     watchdog = StragglerWatchdog(loop_cfg.straggler_factor)
     losses: list[float] = []
     pending_writer = None
+    saved_final = False
     for step in range(start_step, loop_cfg.total_steps):
         batch = next(data_iter)
         t0 = time.time()
@@ -87,16 +89,19 @@ def train(runner, data_iter, loop_cfg: LoopConfig,
             on_step(step, loss)
         if loop_cfg.log_every and step % loop_cfg.log_every == 0:
             lr = getattr(runner, "lr_for_step", lambda: 0.0)()
-            print(f"step {step:5d} loss {loss:.4f} dt {dt*1e3:7.1f}ms"
+            print(f"step {step:5d} loss {loss:.4f} lr {lr:.3e} "
+                  f"dt {dt*1e3:7.1f}ms"
                   + (" [STRAGGLER]" if slow else ""), flush=True)
         if (loop_cfg.ckpt_dir and loop_cfg.ckpt_every
                 and (step + 1) % loop_cfg.ckpt_every == 0):
             pending_writer = ckpt.save(loop_cfg.ckpt_dir, step + 1,
                                        runner.state_dict(), keep=loop_cfg.keep,
                                        async_write=loop_cfg.async_ckpt)
+            saved_final = (step + 1) == loop_cfg.total_steps
     if pending_writer is not None:
         pending_writer.join()
-    if loop_cfg.ckpt_dir:
+    if loop_cfg.ckpt_dir and not saved_final:
+        # skipped when total_steps landed exactly on a ckpt_every boundary
         ckpt.save(loop_cfg.ckpt_dir, loop_cfg.total_steps, runner.state_dict(),
                   keep=loop_cfg.keep, async_write=False)
     return {"losses": losses, "stragglers": watchdog.flagged,
