@@ -2,7 +2,18 @@
 measured on CPU with a small model (relative ordering is the claim: HiFT's
 per-step compute shrinks because backward is cut below the active group).
 All runners come from the unified strategy registry; a MeZO row shows the
-gradient-free step cost (two forwards, no backward) for scale."""
+gradient-free step cost (two forwards, no backward) for scale.
+
+When more than one device is visible, sharded rows run the same HiFT/FPFT
+steps mesh-compiled over (data, model) and report the speedup vs their own
+single-device row.  Fabricate devices on a CPU-only host with
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+        PYTHONPATH=src python benchmarks/speed_table.py
+
+(or just ``./run.sh benchmarks/speed_table.py`` — run.sh exports the flag).
+On host CPUs the sharded rows mostly measure collective overhead; on real
+accelerators the same code path is where the scaling comes from."""
 from __future__ import annotations
 
 import time
@@ -11,6 +22,7 @@ import jax
 
 from repro.configs.base import ArchConfig
 from repro.core import HiFTConfig, LRSchedule, make_runner
+from repro.launch.mesh import mesh_from_spec
 from repro.models import transformer as T
 
 
@@ -29,11 +41,22 @@ def _batch(cfg, b=8, s=256):
 def _time_steps(runner, batch, n=10, warmup=None):
     warm = warmup if warmup is not None else getattr(runner, "k", 1)
     for _ in range(warm):          # compile every per-group step
-        runner.train_step(batch)
+        loss = runner.train_step(batch)
+    jax.block_until_ready(loss)    # drain warmup before the timer starts
     t0 = time.time()
     for _ in range(n):
-        runner.train_step(batch)
+        # block on the loss so async dispatch doesn't fake sub-ms steps
+        jax.block_until_ready(runner.train_step(batch))
     return (time.time() - t0) / n
+
+
+def _bench_mesh():
+    """Largest (data=2, model=n/2) mesh the visible devices allow, or None
+    on a single-device host."""
+    n = len(jax.devices())
+    if n < 2:
+        return None
+    return mesh_from_spec(f"2x{n // 2}" if n >= 4 else "2x1")
 
 
 def run(csv=True):
@@ -42,6 +65,7 @@ def run(csv=True):
     batch = _batch(cfg)
     rows = []
     sched = LRSchedule(1e-4)
+    mesh = _bench_mesh()
     for opt in ["adamw", "sgd"]:
         f = make_runner(cfg, "fpft", params=params, optimizer=opt,
                         schedule=sched)
@@ -54,6 +78,22 @@ def run(csv=True):
             print(f"speed_table/fpft/{opt},{tf*1e6:.0f},steps_per_s={1/tf:.2f}")
             print(f"speed_table/hift/{opt},{th*1e6:.0f},steps_per_s={1/th:.2f};"
                   f"speedup_vs_fpft={tf/th:.2f}x")
+        if mesh is None or opt != "adamw":
+            continue
+        # sharded rows: same steps, mesh-compiled (ISSUE: multi-device row)
+        shape = "x".join(str(s) for s in mesh.devices.shape)
+        fs = make_runner(cfg, "fpft", params=params, optimizer=opt,
+                         schedule=sched, mesh=mesh)
+        tfs = _time_steps(fs, batch, warmup=2)
+        hs = make_runner(cfg, "hift", params=params, optimizer=opt,
+                         hift=HiFTConfig(m=1), schedule=sched, mesh=mesh)
+        ths = _time_steps(hs, batch, n=hs.k)
+        rows.append((f"{opt}@{shape}", tfs, ths))
+        if csv:
+            print(f"speed_table/fpft-sharded@{shape}/{opt},{tfs*1e6:.0f},"
+                  f"steps_per_s={1/tfs:.2f};speedup_vs_1dev={tf/tfs:.2f}x")
+            print(f"speed_table/hift-sharded@{shape}/{opt},{ths*1e6:.0f},"
+                  f"steps_per_s={1/ths:.2f};speedup_vs_1dev={th/ths:.2f}x")
     mz = make_runner(cfg, "mezo", params=params, schedule=sched)
     tm = _time_steps(mz, batch, warmup=2)
     rows.append(("mezo", tm, tm))

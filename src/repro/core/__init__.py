@@ -4,7 +4,8 @@ from repro.core.scheduler import LRSchedule
 from repro.core.strategy import (TrainState, Strategy, Runner,
                                  HiFTConfig, LiSAConfig, MeZOConfig,
                                  HiFTStrategy, FPFTStrategy, LiSAStrategy,
-                                 MeZOStrategy, build_fpft_step, write_back,
+                                 MeZOStrategy, build_fpft_step,
+                                 fpft_step_body, write_back,
                                  host_put, device_put_async)
 from repro.core import registry
 from repro.core.registry import (get_strategy_cls, make_runner, make_strategy,

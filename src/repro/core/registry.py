@@ -9,8 +9,9 @@ entry point for building a training driver:
 
 Everything downstream (train/loop.py, launch/train.py, dry-run, benchmarks,
 examples) programs against this surface; ``hift|fpft|mezo|lisa`` are the
-built-ins and future strategies (LOMO-style fused backward, sharded HiFT)
-plug in with one ``@register_strategy`` line.
+built-ins — all mesh-aware via ``make_runner(..., mesh=...)`` — and future
+strategies (e.g. LOMO-style fused backward) plug in with one
+``@register_strategy`` line.
 """
 from __future__ import annotations
 
@@ -51,14 +52,18 @@ def make_strategy(name: str, cfg, optimizer, **kwargs):
 
 def make_runner(cfg, strategy: str = "hift", *, params: Any = None,
                 optimizer: Any = "adamw", rng: Any = None, seed: int = 0,
-                **kwargs):
+                mesh: Any = None, **kwargs):
     """One factory for every fine-tuning strategy.
 
     ``optimizer`` may be a name (resolved via ``repro.optim.make_optimizer``)
     or an ``Optimizer``; ``params`` default to a fresh ``family.init`` from
-    ``seed``.  Remaining kwargs go to the strategy constructor (``schedule``,
-    ``policy``, ``loss_fn``, and per-strategy configs such as ``hift=``,
-    ``lisa=``, ``mezo=``).
+    ``seed``.  ``mesh`` (a ``jax.sharding.Mesh``, e.g. from
+    ``repro.launch.mesh.mesh_from_spec("2x4")``) makes the strategy's jitted
+    steps mesh-aware: params/optimizer state shard over the ``model`` axis
+    and batches over ``data`` per ``repro.dist.shardings`` (see
+    ``docs/sharding.md``).  Remaining kwargs go to the strategy constructor
+    (``schedule``, ``policy``, ``loss_fn``, ``param_sharding_fn``, and
+    per-strategy configs such as ``hift=``, ``lisa=``, ``mezo=``).
     """
     import jax
 
@@ -72,5 +77,7 @@ def make_runner(cfg, strategy: str = "hift", *, params: Any = None,
         params = get_family(cfg).init(cfg, jax.random.PRNGKey(seed))
     if rng is None:
         rng = jax.random.PRNGKey(seed)
+    if mesh is not None:
+        kwargs["mesh"] = mesh
     return Runner(make_strategy(strategy, cfg, optimizer, **kwargs), params,
                   rng=rng)

@@ -27,11 +27,21 @@ Built-in strategies (registered in ``repro.core.registry``):
                optimizer state; ``opt_state`` stays empty and the rng rides
                in ``extra`` (the paper's memory floor baseline).
 
+Every strategy is also **mesh-aware**: pass ``mesh=`` (a
+``jax.sharding.Mesh`` with ``data``/``model`` axes, e.g. from
+``repro.launch.mesh.mesh_from_spec``) and the jitted steps compile under
+explicit ``in_shardings``/``out_shardings`` from ``repro.dist.shardings`` —
+active-group params and optimizer bundles shard over ``model``, frozen
+params replicate, batches split over ``data``, and MoE layers route through
+their ``shard_map`` expert-parallel path.  ``docs/sharding.md`` documents
+the placement rules and the CPU-device-count trick for testing them.
+
 :class:`Runner` is the thin mutable facade over ``(strategy, state)`` that
 driver loops use; ``repro.core.registry.make_runner`` is the factory.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Any, Callable, Optional
 
@@ -40,6 +50,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.common.pytree import tree_cast, tree_size
+from repro.dist import ctx as dist_ctx
+from repro.dist import shardings as dist_shardings
 from repro.core.grouping import (Group, group_cut, make_groups, merge_params,
                                  order_groups, split_params)
 from repro.core.registry import register_strategy
@@ -55,26 +67,38 @@ Metrics = dict
 
 # --------------------------------------------------------------- placement
 
-def host_put(tree: PyTree) -> PyTree:
+def host_put(tree: PyTree, shardings: PyTree = None) -> PyTree:
     """Move a pytree to host memory (the paper's MoveOptimizerState2CPU).
 
     On TPU this uses the pinned_host memory kind so the transfer back is an
-    async DMA; on the CPU backend arrays are already host-resident."""
+    async DMA; on the CPU backend arrays are already host-resident.  When a
+    ``shardings`` tree is given (mesh-sharded bundles), each leaf keeps its
+    partitioning and only the memory kind changes, so a sharded optimizer
+    bundle offloads without gathering."""
     try:
         dev = jax.devices()[0]
         if dev.platform == "cpu":
             return tree
+        if shardings is not None:
+            host = jax.tree.map(lambda s: s.with_memory_kind("pinned_host"),
+                                shardings)
+            return jax.device_put(tree, host)
         sharding = jax.sharding.SingleDeviceSharding(dev, memory_kind="pinned_host")
         return jax.device_put(tree, sharding)
     except Exception:
         return tree
 
 
-def device_put_async(tree: PyTree) -> PyTree:
-    """MoveOptimizerState2GPU analogue — dispatches async, overlaps forward."""
+def device_put_async(tree: PyTree, shardings: PyTree = None) -> PyTree:
+    """MoveOptimizerState2GPU analogue — dispatches async, overlaps forward.
+
+    With a ``shardings`` tree the transfer restores the mesh placement
+    (device memory kind) rather than funnelling through device 0."""
     dev = jax.devices()[0]
     if dev.platform == "cpu":
         return tree
+    if shardings is not None:
+        return jax.device_put(tree, shardings)
     return jax.device_put(tree, jax.sharding.SingleDeviceSharding(dev))
 
 
@@ -136,15 +160,31 @@ class TrainState:
     extra: PyTree = dataclasses.field(default_factory=dict)
 
     def replace(self, **kw) -> "TrainState":
+        """Functional update (``dataclasses.replace``) — states are frozen."""
         return dataclasses.replace(self, **kw)
 
     def to_tree(self) -> dict:
-        """Plain dict-of-dicts view for the path-keyed checkpoint codec."""
+        """Plain dict-of-dicts view for the path-keyed checkpoint codec.
+
+        Layout: ``{"params", "opt_state", "step", "extra"}`` with ``step``
+        normalized to a host ``np.int64`` scalar.  Leaves may be sharded
+        jax.Arrays — ``repro.train.checkpoint.save`` snapshots them to host
+        numpy (an implicit all-gather per leaf) before serializing, so a
+        state trained on a mesh checkpoints like any other."""
         return {"params": self.params, "opt_state": self.opt_state,
                 "step": np.int64(int(self.step)), "extra": self.extra}
 
     @classmethod
     def from_tree(cls, tree: dict) -> "TrainState":
+        """Inverse of :meth:`to_tree`.
+
+        Accepts two layouts: the current one (``step`` key, see
+        :meth:`to_tree`) and the pre-Strategy-API runner ``state_dict``
+        (``step_count`` key), which is routed to
+        :meth:`_from_legacy_tree` so checkpoints written before PR 1 keep
+        restoring.  Restored leaves are host-resident; re-placing them on a
+        mesh is the caller's job (``strategy.place_params`` /
+        ``jax.device_put``)."""
         if "step" not in tree and "step_count" in tree:
             return cls._from_legacy_tree(tree)
         return cls(params=tree["params"],
@@ -175,31 +215,98 @@ jax.tree_util.register_pytree_node(
 # ------------------------------------------------------------ Strategy base
 
 class Strategy:
-    """Protocol base.  Subclasses implement ``init`` and ``step``; both are
-    state-in/state-out — a strategy instance never mutates after __init__.
+    """Protocol base.  Subclasses implement ``init`` and ``step``.
 
-    Purity caveat: on accelerator backends the jitted steps DONATE the
-    active param / optimizer buffers (the k-fold memory reduction depends on
-    it), so the input state is consumed — sequential drivers like ``Runner``
-    are unaffected, but re-stepping an old state is CPU-only."""
+    **Purity contract.**  Construction captures everything static (config,
+    model family, optimizer, mesh, jitted-step caches); after ``__init__`` a
+    strategy instance never mutates observable state.  ``init`` is a pure
+    function of ``(params, rng)`` and ``step`` of ``(state, batch)`` — all
+    training state, including HiFT's queue position and MeZO's rng, lives in
+    the returned :class:`TrainState`, so drivers may checkpoint/fork/replay
+    states freely and two strategies built from the same arguments are
+    interchangeable mid-run.
+
+    One caveat: on accelerator backends the jitted steps DONATE the active
+    param / optimizer buffers (the k-fold memory reduction depends on it),
+    so the input state is consumed — sequential drivers like ``Runner`` are
+    unaffected, but re-stepping an old state is CPU-only.
+
+    **Sharding.**  With a multi-device ``mesh`` the steps compile with
+    explicit shardings (see module docstring); ``param_sharding_fn(tree,
+    mesh) -> sharding tree`` overrides the structural placement rule from
+    ``repro.dist.shardings.param_shardings``."""
 
     name = "base"
     k = 1   # steps per LR cycle (HiFT: number of groups; others: 1)
 
     def __init__(self, cfg, optimizer: Optional[Optimizer], *,
                  schedule: Optional[LRSchedule] = None, policy: Policy = FP32,
-                 loss_fn: Optional[Callable] = None):
+                 loss_fn: Optional[Callable] = None, mesh=None,
+                 param_sharding_fn: Optional[Callable] = None):
         self.cfg = cfg
         self.model = get_family(cfg)
         self.optimizer = optimizer
         self.schedule = schedule if schedule is not None else LRSchedule()
         self.policy = policy
         self.loss_fn = loss_fn or self.model.loss_fn
+        self.mesh = mesh
+        self.param_sharding_fn = param_sharding_fn
+
+    # ------------------------------------------------------------ sharding
+
+    @property
+    def sharded(self) -> bool:
+        """True when a multi-device mesh drives the jitted steps."""
+        return self.mesh is not None and self.mesh.size > 1
+
+    def param_shardings(self, tree: PyTree) -> PyTree:
+        """NamedSharding tree for a params-shaped tree (structural rule from
+        ``dist.shardings`` unless ``param_sharding_fn`` overrides it).
+
+        Known limit of the override: optimizer state / bundles keep the
+        structural rule (which mirrors the default placement), so a custom
+        ``param_sharding_fn`` that diverges from it makes GSPMD reshard
+        moments inside the update until bundle shardings learn to derive
+        from the resolved param tree."""
+        if self.param_sharding_fn is not None:
+            return self.param_sharding_fn(tree, self.mesh)
+        return dist_shardings.param_shardings(tree, self.mesh)
+
+    def resident_param_shardings(self, tree: PyTree) -> PyTree:
+        """Placement of the FULL param tree between steps.  Default: the
+        in-step placement.  Grouped strategies override to replicated —
+        between their steps the tree is mostly frozen weights, and keeping
+        them resident-replicated makes the per-step frozen transfer a no-op
+        instead of an every-step all-gather."""
+        return self.param_shardings(tree)
+
+    def place_params(self, params: PyTree) -> PyTree:
+        """Commit a param tree onto its resident placement (no-op
+        unsharded)."""
+        if not self.sharded:
+            return params
+        return jax.device_put(params, self.resident_param_shardings(params))
+
+    def _trace_ctx(self):
+        """Context the jitted steps are traced/called under: activates the
+        ambient activation-sharding constraints (``repro.dist.ctx``) so
+        layer-boundary annotations anchor GSPMD and MoE layers take their
+        shard_map expert-parallel path."""
+        if not self.sharded:
+            return contextlib.nullcontext()
+        return dist_ctx.activation_sharding(
+            self.mesh, dist_shardings.data_axes(self.mesh))
 
     def init(self, params: PyTree, rng=None) -> TrainState:
+        """Pure: build the strategy's :class:`TrainState` from a param tree
+        (placing params on the mesh when sharded).  ``rng`` seeds stochastic
+        strategies (MeZO); deterministic ones ignore it."""
         raise NotImplementedError
 
     def step(self, state: TrainState, batch) -> tuple[TrainState, Metrics]:
+        """Pure (modulo donation, see class docstring): advance one training
+        step, returning the next state and a metrics dict with at least
+        ``{"loss", "lr", "strategy"}``."""
         raise NotImplementedError
 
     def lr_at(self, step: int) -> float:
@@ -215,16 +322,27 @@ class Strategy:
 class _GroupedStrategy(Strategy):
     """Shared machinery for strategies that train ONE Group per step
     (HiFT's fixed sweep, LiSA's random sampling): per-group jitted steps,
-    lazy optimizer-state bundles, host offload, Mixed^Hi masters."""
+    lazy optimizer-state bundles, host offload, Mixed^Hi masters.
+
+    Sharded placement model: the resident full tree is REPLICATED (it is
+    frozen weights but for one group), while inside a step the active
+    group's params + bundle shard over ``model`` and the batch over
+    ``data``.  So the per-step transfers are small (one group in, one group
+    out) and the frozen majority never moves."""
 
     use_cut = True
     offload_optimizer = True
+
+    def resident_param_shardings(self, tree: PyTree) -> PyTree:
+        return dist_shardings.replicated(tree, self.mesh)
 
     def _setup_groups(self, m: int) -> None:
         self.units = self.model.unit_spec(self.cfg)
         self.groups = make_groups(self.units, m)
         self.k = len(self.groups)
-        self._step_fns: dict[int, Callable] = {}
+        # per-group caches: gi -> (jitted step, in_shardings|None) and
+        # ("wb", gi) -> jitted sharded write_back
+        self._step_fns: dict[Any, tuple[Callable, Any]] = {}
 
     def _cast_params(self, params: PyTree) -> PyTree:
         policy = self.policy
@@ -246,8 +364,16 @@ class _GroupedStrategy(Strategy):
             return {"opt": self.optimizer.init(master), "master": master}
         return {"opt": self.optimizer.init(active)}
 
-    def build_step(self, gi: int) -> Callable:
-        """The jitted per-group train step (k of these exist)."""
+    def build_step(self, gi: int, example=None) -> tuple[Callable, Any]:
+        """The jitted per-group train step (k of these exist).
+
+        Returns ``(fn, in_shardings)``.  Unsharded, ``in_shardings`` is None
+        and ``fn`` is a plain jit.  With a multi-device mesh (and ``example =
+        (active, frozen, bundle, batch)`` supplying the argument structures)
+        the step compiles with explicit shardings from
+        ``dist.shardings.group_step_shardings``: active params + optimizer
+        bundle partitioned over ``model``, frozen params replicated, the
+        batch split over the data axes."""
         group = self.groups[gi]
         cut = self._cut(group)
         cfg, opt, policy = self.cfg, self.optimizer, self.policy
@@ -268,13 +394,42 @@ class _GroupedStrategy(Strategy):
             new_active, new_st = opt.update(grads, bundle["opt"], active, lr)
             return new_active, {"opt": new_st}, loss
 
+        if self.sharded and example is not None:
+            ins, outs = dist_shardings.group_step_shardings(
+                self.mesh, *example,
+                active_shardings=self.param_shardings(example[0]))
+            # donate the bundle only: `active` leaves whose in-step spec
+            # matches the resident placement alias state.params (device_put
+            # is a no-op then), and the jitted _write_back still needs that
+            # tree alive after this step donates its buffers
+            donate = () if jax.devices()[0].platform == "cpu" else (2,)
+            return jax.jit(step, donate_argnums=donate, in_shardings=ins,
+                           out_shardings=outs), ins
         donate = () if jax.devices()[0].platform == "cpu" else (0, 2)
-        return jax.jit(step, donate_argnums=donate)
+        return jax.jit(step, donate_argnums=donate), None
 
-    def _fn(self, gi: int) -> Callable:
+    def _fn(self, gi: int, example=None) -> tuple[Callable, Any]:
         if gi not in self._step_fns:
-            self._step_fns[gi] = self.build_step(gi)
+            self._step_fns[gi] = self.build_step(gi, example)
         return self._step_fns[gi]
+
+    def _write_back(self, gi: int, params: PyTree,
+                    new_active: PyTree) -> PyTree:
+        """Fold the active sub-tree back into the full tree.  Sharded, this
+        is itself a jitted computation with ``out_shardings`` pinned to the
+        canonical param placement, so the full tree's partitioning cannot
+        drift as successive groups write their slices."""
+        if not self.sharded:
+            return write_back(params, new_active, self.groups[gi])
+        key = ("wb", gi)
+        if key not in self._step_fns:
+            group = self.groups[gi]
+            outs = self.resident_param_shardings(params)
+            donate = () if jax.devices()[0].platform == "cpu" else (0,)
+            fn = jax.jit(lambda p, a: write_back(p, a, group),
+                         out_shardings=outs, donate_argnums=donate)
+            self._step_fns[key] = (fn, None)
+        return self._step_fns[key][0](params, new_active)
 
     def _group_step(self, state: TrainState, batch, gi: int,
                     lr: float) -> tuple[PyTree, PyTree, jnp.ndarray]:
@@ -282,18 +437,28 @@ class _GroupedStrategy(Strategy):
         active, frozen = split_params(state.params, group)
         key = str(gi)
         bundle = state.opt_state.get(key)
-        if bundle is None:
+        fresh = bundle is None
+        if fresh:
             bundle = self._init_bundle(active)
-        elif self.offload_optimizer:
-            bundle = device_put_async(bundle)  # host -> device, overlaps fwd
         lr = jnp.asarray(lr, jnp.float32)
-        new_active, new_bundle, loss = self._fn(gi)(active, frozen, bundle,
-                                                    batch, lr)
+        with self._trace_ctx():
+            fn, ins = self._fn(gi, (active, frozen, bundle, batch))
+            if not fresh and self.offload_optimizer:
+                # host -> device, overlaps fwd; sharded bundles keep their
+                # partitioning and only change memory kind
+                bundle = device_put_async(
+                    bundle, ins[2] if ins is not None else None)
+            if ins is not None:
+                active, frozen, bundle, batch = jax.device_put(
+                    (active, frozen, bundle, batch), ins[:4])
+            new_active, new_bundle, loss = fn(active, frozen, bundle,
+                                              batch, lr)
         if self.offload_optimizer:
-            new_bundle = host_put(new_bundle)   # device -> host
+            new_bundle = host_put(new_bundle,
+                                  ins[2] if ins is not None else None)
         opt_state = dict(state.opt_state)
         opt_state[key] = new_bundle
-        return write_back(state.params, new_active, group), opt_state, loss
+        return self._write_back(gi, state.params, new_active), opt_state, loss
 
     def peak_trainable_params(self, params: PyTree) -> int:
         return max(tree_size(split_params(params, g)[0]) for g in self.groups)
@@ -319,18 +484,17 @@ class HiFTStrategy(_GroupedStrategy):
                  loss_fn: Optional[Callable] = None, mesh=None,
                  param_sharding_fn: Optional[Callable] = None):
         super().__init__(cfg, optimizer, schedule=schedule, policy=policy,
-                         loss_fn=loss_fn)
+                         loss_fn=loss_fn, mesh=mesh,
+                         param_sharding_fn=param_sharding_fn)
         self.hift = hift if hift is not None else HiFTConfig()
         self.use_cut = self.hift.use_cut
         self.offload_optimizer = self.hift.offload_optimizer
-        self.mesh = mesh
-        self.param_sharding_fn = param_sharding_fn
         self._setup_groups(self.hift.m)
         self.order = order_groups(self.groups, self.hift.strategy,
                                   self.hift.seed)
 
     def init(self, params: PyTree, rng=None) -> TrainState:
-        return TrainState(self._cast_params(params), {}, 0,
+        return TrainState(self.place_params(self._cast_params(params)), {}, 0,
                           {"order": np.asarray(self.order, np.int64)})
 
     def _order_at(self, state: TrainState) -> list[int]:
@@ -369,9 +533,11 @@ class LiSAStrategy(_GroupedStrategy):
 
     def __init__(self, cfg, optimizer, *, lisa: Optional[LiSAConfig] = None,
                  schedule: Optional[LRSchedule] = None, policy: Policy = FP32,
-                 loss_fn: Optional[Callable] = None):
+                 loss_fn: Optional[Callable] = None, mesh=None,
+                 param_sharding_fn: Optional[Callable] = None):
         super().__init__(cfg, optimizer, schedule=schedule, policy=policy,
-                         loss_fn=loss_fn)
+                         loss_fn=loss_fn, mesh=mesh,
+                         param_sharding_fn=param_sharding_fn)
         self.lisa = lisa if lisa is not None else LiSAConfig()
         self.use_cut = self.lisa.use_cut
         self.offload_optimizer = self.lisa.offload_optimizer
@@ -391,7 +557,8 @@ class LiSAStrategy(_GroupedStrategy):
         return self.groups[self.group_index_at(step)]
 
     def init(self, params: PyTree, rng=None) -> TrainState:
-        return TrainState(self._cast_params(params), {}, 0, {})
+        return TrainState(self.place_params(self._cast_params(params)), {}, 0,
+                          {})
 
     def step(self, state: TrainState, batch) -> tuple[TrainState, Metrics]:
         step = int(state.step)
@@ -405,10 +572,12 @@ class LiSAStrategy(_GroupedStrategy):
 
 # ------------------------------------------------------------------- FPFT
 
-def build_fpft_step(cfg, optimizer: Optimizer, policy: Policy = FP32,
-                    loss_fn: Optional[Callable] = None) -> Callable:
-    """Returns jitted ``step(params, opt_state, batch, lr) ->
-    (new_params, new_opt_state, loss)`` updating ALL parameters."""
+def fpft_step_body(cfg, optimizer: Optimizer, policy: Policy = FP32,
+                   loss_fn: Optional[Callable] = None) -> Callable:
+    """The un-jitted full-parameter step ``step(params, opt_state, batch,
+    lr) -> (new_params, new_opt_state, loss)``; :func:`build_fpft_step`
+    jits it plainly, ``FPFTStrategy`` compiles it with explicit shardings
+    when it has a mesh."""
     model = get_family(cfg)
     loss_fn = loss_fn or model.loss_fn
 
@@ -420,8 +589,16 @@ def build_fpft_step(cfg, optimizer: Optimizer, policy: Policy = FP32,
         new_params, new_state = optimizer.update(grads, opt_state, params, lr)
         return new_params, new_state, loss
 
+    return step
+
+
+def build_fpft_step(cfg, optimizer: Optimizer, policy: Policy = FP32,
+                    loss_fn: Optional[Callable] = None) -> Callable:
+    """Returns jitted ``step(params, opt_state, batch, lr) ->
+    (new_params, new_opt_state, loss)`` updating ALL parameters."""
     donate = () if jax.devices()[0].platform == "cpu" else (0, 1)
-    return jax.jit(step, donate_argnums=donate)
+    return jax.jit(fpft_step_body(cfg, optimizer, policy, loss_fn),
+                   donate_argnums=donate)
 
 
 @register_strategy("fpft")
@@ -431,27 +608,51 @@ class FPFTStrategy(Strategy):
     name = "fpft"
 
     def __init__(self, cfg, optimizer, *, schedule: Optional[LRSchedule] = None,
-                 policy: Policy = FP32, loss_fn: Optional[Callable] = None):
+                 policy: Policy = FP32, loss_fn: Optional[Callable] = None,
+                 mesh=None, param_sharding_fn: Optional[Callable] = None):
         super().__init__(cfg, optimizer, schedule=schedule, policy=policy,
-                         loss_fn=loss_fn)
-        self._step_fn: Optional[Callable] = None
+                         loss_fn=loss_fn, mesh=mesh,
+                         param_sharding_fn=param_sharding_fn)
+        self._step_fn: Optional[tuple[Callable, Any]] = None
 
     def init(self, params: PyTree, rng=None) -> TrainState:
         if self.policy.name in ("bf16",):
             params = tree_cast(params, self.policy.param_dtype)
-        return TrainState(params, self.optimizer.init(params), 0, {})
+        params = self.place_params(params)
+        opt_state = self.optimizer.init(params)
+        if self.sharded:
+            opt_state = jax.device_put(
+                opt_state,
+                dist_shardings.opt_state_shardings(opt_state, params,
+                                                   self.mesh))
+        return TrainState(params, opt_state, 0, {})
 
-    def _fn(self) -> Callable:
+    def _fn(self, example=None) -> tuple[Callable, Any]:
         if self._step_fn is None:
-            self._step_fn = build_fpft_step(self.cfg, self.optimizer,
-                                            self.policy, self.loss_fn)
+            if self.sharded and example is not None:
+                ins, outs = dist_shardings.fpft_step_shardings(
+                    self.mesh, *example,
+                    param_shardings_tree=self.param_shardings(example[0]))
+                donate = () if jax.devices()[0].platform == "cpu" else (0, 1)
+                fn = jax.jit(fpft_step_body(self.cfg, self.optimizer,
+                                            self.policy, self.loss_fn),
+                             donate_argnums=donate, in_shardings=ins,
+                             out_shardings=outs)
+                self._step_fn = fn, ins
+            else:
+                self._step_fn = build_fpft_step(
+                    self.cfg, self.optimizer, self.policy, self.loss_fn), None
         return self._step_fn
 
     def step(self, state: TrainState, batch) -> tuple[TrainState, Metrics]:
         step = int(state.step)
         lr = self.schedule.at_cycle(step)
-        params, opt_state, loss = self._fn()(
-            state.params, state.opt_state, batch, jnp.asarray(lr, jnp.float32))
+        with self._trace_ctx():
+            fn, ins = self._fn((state.params, state.opt_state, batch))
+            args = (state.params, state.opt_state, batch)
+            if ins is not None:
+                args = jax.device_put(args, ins[:3])
+            params, opt_state, loss = fn(*args, jnp.asarray(lr, jnp.float32))
         new_state = TrainState(params, opt_state, step + 1, state.extra)
         return new_state, {"loss": loss, "lr": lr, "strategy": self.name}
 
@@ -462,24 +663,34 @@ class FPFTStrategy(Strategy):
 class MeZOStrategy(Strategy):
     """Zeroth-order SPSA fine-tuning (MeZO, Malladi et al. 2023): two forward
     passes, no backward, no optimizer state — memory ~= inference.  The z
-    noise is regenerated from ``fold_in(rng, step)`` so resume is exact."""
+    noise is regenerated from ``fold_in(rng, step)`` so resume is exact.
+
+    Sharded runs force the *partitionable* threefry PRNG for the step: the
+    legacy implementation generates different values once GSPMD partitions
+    the bit-generation, which would make the SPSA perturbation (and hence
+    the whole run) depend on the mesh shape.  Consequence: a sharded MeZO
+    run reproduces any other sharded run of the same seed exactly, on any
+    mesh, but not an unsharded run (whose steps keep the legacy stream)."""
 
     name = "mezo"
 
     def __init__(self, cfg, optimizer=None, *, mezo: Optional[MeZOConfig] = None,
                  schedule: Optional[LRSchedule] = None, policy: Policy = FP32,
-                 loss_fn: Optional[Callable] = None):
+                 loss_fn: Optional[Callable] = None, mesh=None,
+                 param_sharding_fn: Optional[Callable] = None):
         super().__init__(cfg, optimizer, schedule=schedule, policy=policy,
-                         loss_fn=loss_fn)
+                         loss_fn=loss_fn, mesh=mesh,
+                         param_sharding_fn=param_sharding_fn)
         self.mezo = mezo if mezo is not None else MeZOConfig()
-        self._step_fn: Optional[Callable] = None
+        self._step_fn: Optional[tuple[Callable, Any]] = None
 
     def init(self, params: PyTree, rng=None) -> TrainState:
         if rng is None:
             rng = jax.random.PRNGKey(self.mezo.seed)
-        return TrainState(params, {}, 0, {"rng": jnp.asarray(rng, jnp.uint32)})
+        return TrainState(self.place_params(params), {}, 0,
+                          {"rng": jnp.asarray(rng, jnp.uint32)})
 
-    def _fn(self) -> Callable:
+    def _fn(self, example=None) -> tuple[Callable, Any]:
         if self._step_fn is None:
             cfg, lf = self.cfg, self.loss_fn
             cd, eps = self.policy.compute_dtype, self.mezo.eps
@@ -487,8 +698,15 @@ class MeZOStrategy(Strategy):
             def loss_of(p, b):
                 return lf(cfg, p, b, compute_dtype=cd)
 
-            self._step_fn = jax.jit(
-                lambda p, b, k, lr: mezo_step(loss_of, p, b, k, lr, eps))
+            step = lambda p, b, k, lr: mezo_step(loss_of, p, b, k, lr, eps)
+            if self.sharded and example is not None:
+                ins, outs = dist_shardings.mezo_step_shardings(
+                    self.mesh, *example,
+                    param_shardings_tree=self.param_shardings(example[0]))
+                self._step_fn = jax.jit(step, in_shardings=ins,
+                                        out_shardings=outs), ins
+            else:
+                self._step_fn = jax.jit(step), None
         return self._step_fn
 
     def step(self, state: TrainState, batch) -> tuple[TrainState, Metrics]:
@@ -496,8 +714,14 @@ class MeZOStrategy(Strategy):
         key = jax.random.fold_in(jnp.asarray(state.extra["rng"], jnp.uint32),
                                  step)
         lr = self.schedule.at_cycle(step)
-        params, loss = self._fn()(state.params, batch,
-                                  key, jnp.asarray(lr, jnp.float32))
+        rng_ctx = (jax.threefry_partitionable(True) if self.sharded
+                   else contextlib.nullcontext())
+        with self._trace_ctx(), rng_ctx:
+            fn, ins = self._fn((state.params, batch))
+            args = (state.params, batch)
+            if ins is not None:
+                args = jax.device_put(args, ins[:2])
+            params, loss = fn(*args, key, jnp.asarray(lr, jnp.float32))
         new_state = TrainState(params, state.opt_state, step + 1, state.extra)
         return new_state, {"loss": loss, "lr": lr, "strategy": self.name}
 

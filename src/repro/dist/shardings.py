@@ -9,6 +9,13 @@ apply uniformly across every model family's param tree:
   (n_layers) are never eligible because they are scanned, not partitioned.
 - batches: leading (batch) dim over the data axes (``pod`` folds into data).
 - decode caches: batch-like dim over data, then one feature dim over model.
+
+The ``*_step_shardings`` helpers below compose these rules into the
+``(in_shardings, out_shardings)`` pairs the Strategy API's jitted steps are
+compiled with (see ``repro.core.strategy``).  They are donation-safe by
+construction: every donated argument position carries exactly the same spec
+as the output position whose buffer reuses it, so ``donate_argnums`` never
+forces a layout-changing copy.
 """
 from __future__ import annotations
 
@@ -27,7 +34,10 @@ def _sizes(mesh) -> dict[str, int]:
     return dict(zip(mesh.axis_names, mesh.devices.shape))
 
 
-def _data_axes(mesh) -> tuple[str, ...]:
+def data_axes(mesh) -> tuple[str, ...]:
+    """Mesh axes that carry the batch dimension (``pod`` folds into data).
+    The one place this policy lives — launch.mesh and the strategies'
+    activation-sharding context both call it."""
     return tuple(a for a in mesh.axis_names if a in _DATA_AXES)
 
 
@@ -65,6 +75,12 @@ def param_shardings(params: PyTree, mesh) -> PyTree:
     return jax.tree.map(one, params)
 
 
+def replicated(tree: PyTree, mesh) -> PyTree:
+    """Fully-replicated placement for every leaf (HiFT's frozen params: they
+    are read by all data shards each step but never updated in place)."""
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+
+
 def opt_state_shardings(state: PyTree, params: PyTree, mesh) -> PyTree:
     """Optimizer state mirrors the param placement; moment tensors follow the
     same structural rule, scalars (counts, factored stats) replicate."""
@@ -74,7 +90,7 @@ def opt_state_shardings(state: PyTree, params: PyTree, mesh) -> PyTree:
 
 def batch_shardings(batch: PyTree, mesh) -> PyTree:
     """Input batches: leading dim over the data axes, rest replicated."""
-    axes = _data_axes(mesh)
+    axes = data_axes(mesh)
     n = 1
     for a in axes:
         n *= _sizes(mesh)[a]
@@ -94,7 +110,7 @@ def cache_shardings(cache: PyTree, mesh) -> PyTree:
     data axes (the batch dim in layers-first layouts), then the largest
     remaining dim divisible by the model size takes ``model`` (KV heads)."""
     sizes = _sizes(mesh)
-    axes = _data_axes(mesh)
+    axes = data_axes(mesh)
     dsize = 1
     for a in axes:
         dsize *= sizes[a]
@@ -120,3 +136,62 @@ def cache_shardings(cache: PyTree, mesh) -> PyTree:
         return _named(mesh, ndim, dim_axes) if dim_axes else NamedSharding(mesh, P())
 
     return jax.tree.map(one, cache)
+
+
+# ------------------------------------------------- strategy-step compositions
+
+def bundle_shardings(bundle: PyTree, mesh) -> PyTree:
+    """Placement for a grouped strategy's optimizer-state bundle
+    (``{"opt": ..., "master"?: ...}``).  Moments and fp32 masters are
+    param-shaped, so the structural param rule applies leaf-wise; scalar
+    leaves (counts) fall through to replicated."""
+    return param_shardings(bundle, mesh)
+
+
+def group_step_shardings(mesh, active: PyTree, frozen: PyTree, bundle: PyTree,
+                         batch: PyTree, active_shardings: PyTree = None):
+    """``(in_shardings, out_shardings)`` for a grouped per-step function
+    ``step(active, frozen, bundle, batch, lr) -> (new_active, new_bundle,
+    loss)`` (HiFT / LiSA).
+
+    Active-group params and their bundle shard over ``model``; frozen params
+    replicate — matching the grouped strategies' replicated RESIDENT
+    placement, so handing the frozen majority to the step moves no data
+    (a model-sharded residency would all-gather it every step); batches
+    split over the data axes; ``lr`` and the loss replicate.  Specs are
+    donation-safe (arg 0 / out 0 and arg 2 / out 1 match exactly); the
+    grouped strategies donate only the bundle because active leaves can
+    alias the resident tree.  ``active_shardings`` overrides the structural
+    rule for the active tree (a strategy's ``param_sharding_fn`` hook lands
+    here)."""
+    scalar = NamedSharding(mesh, P())
+    a = active_shardings if active_shardings is not None \
+        else param_shardings(active, mesh)
+    b = bundle_shardings(bundle, mesh)
+    in_shardings = (a, replicated(frozen, mesh), b,
+                    batch_shardings(batch, mesh), scalar)
+    out_shardings = (a, b, scalar)
+    return in_shardings, out_shardings
+
+
+def fpft_step_shardings(mesh, params: PyTree, opt_state: PyTree, batch: PyTree,
+                        param_shardings_tree: PyTree = None):
+    """``(in_shardings, out_shardings)`` for the full-parameter step
+    ``step(params, opt_state, batch, lr) -> (params, opt_state, loss)``.
+    Donated args 0/1 match outputs 0/1."""
+    scalar = NamedSharding(mesh, P())
+    p = param_shardings_tree if param_shardings_tree is not None \
+        else param_shardings(params, mesh)
+    o = opt_state_shardings(opt_state, params, mesh)
+    return (p, o, batch_shardings(batch, mesh), scalar), (p, o, scalar)
+
+
+def mezo_step_shardings(mesh, params: PyTree, batch: PyTree,
+                        param_shardings_tree: PyTree = None):
+    """``(in_shardings, out_shardings)`` for the zeroth-order step
+    ``step(params, batch, key, lr) -> (params, loss)``.  The PRNG key and lr
+    replicate (every device regenerates the same z noise)."""
+    scalar = NamedSharding(mesh, P())
+    p = param_shardings_tree if param_shardings_tree is not None \
+        else param_shardings(params, mesh)
+    return (p, batch_shardings(batch, mesh), scalar, scalar), (p, scalar)

@@ -58,7 +58,8 @@ _COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
 
 
 def _daxes(mesh):
-    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    from repro.dist.shardings import data_axes
+    return data_axes(mesh)
 
 
 def parse_collectives(hlo: str) -> dict:

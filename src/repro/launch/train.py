@@ -7,8 +7,16 @@ Selects any assigned architecture (--arch) and any registered fine-tuning
 strategy (--strategy hift|fpft|mezo|lisa, resolved via
 ``repro.core.registry``), wires the deterministic data pipeline,
 checkpointing and the straggler watchdog.  On a real TPU cluster this same
-entry point runs per-host under the (data, model) mesh; --mesh dxm places
-params with the dist.shardings rules (single CPU device here -> host mesh).
+entry point runs per-host under the (data, model) mesh; ``--mesh DxM``
+(e.g. ``--mesh 2x4``) compiles the strategy step with the dist.shardings
+placement rules.  On a CPU-only host, fabricate devices first:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+        PYTHONPATH=src python -m repro.launch.train --arch smollm-360m \\
+        --smoke --steps 8 --strategy hift --mesh 2x4
+
+(``./run.sh -m repro.launch.train ...`` exports the flag for you; see
+docs/sharding.md.)
 """
 from __future__ import annotations
 
@@ -45,6 +53,9 @@ def main(argv=None):
                     help="HiFT group visit order")
     ap.add_argument("--switch-every", type=int, default=5,
                     help="LiSA re-sampling period")
+    ap.add_argument("--mesh", default=None,
+                    help="device mesh for sharded steps: DxM (data x model, "
+                         "e.g. 2x4) or name=size pairs (data=2,model=4)")
     ap.add_argument("--optimizer", default="adamw")
     ap.add_argument("--policy", default="fp32",
                     choices=["fp32", "mixed", "mixed_hi", "bf16"])
@@ -62,10 +73,18 @@ def main(argv=None):
     n = sum(x.size for x in jax.tree.leaves(params))
     print(f"[{cfg.name}] {n/1e6:.1f}M params, family={cfg.family}")
 
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import mesh_from_spec
+        mesh = mesh_from_spec(args.mesh)
+        print(f"mesh {dict(zip(mesh.axis_names, mesh.devices.shape))} over "
+              f"{mesh.size}/{len(jax.devices())} "
+              f"{jax.devices()[0].platform} devices")
+
     strategy = "fpft" if args.fpft else args.strategy
     sched = LRSchedule(base_lr=args.lr, kind="cosine",
                        total_cycles=max(args.steps, 1))
-    kw = {"schedule": sched, "policy": get_policy(args.policy)}
+    kw = {"schedule": sched, "policy": get_policy(args.policy), "mesh": mesh}
     if strategy == "hift":
         kw["hift"] = HiFTConfig(m=args.m, strategy=args.order, seed=args.seed)
     elif strategy == "lisa":

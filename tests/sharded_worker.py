@@ -1,0 +1,128 @@
+"""Subprocess worker for tests/test_sharded_step.py.
+
+Runs under a FORCED multi-device CPU backend (the XLA flag must be set
+before jax initializes, which is why this is a separate process: the main
+pytest process owns a single-device backend).  Compares mesh-sharded
+strategy steps against the unsharded path and exercises checkpointing with
+sharded leaves, then prints one JSON summary line to stdout.
+
+Not named test_* on purpose — pytest must not collect it.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=4").strip()
+
+import json
+import tempfile
+
+import jax
+import numpy as np
+
+
+def tiny_cfg():
+    from repro.configs.base import ArchConfig
+    return ArchConfig(name="tiny", family="dense", n_layers=4, d_model=64,
+                      n_heads=4, kv_heads=2, d_ff=128, vocab=256,
+                      block_q=16, block_k=16, ce_chunk=0)
+
+
+def make_batch(cfg, batch=4, seq=32, seed=0):
+    k = jax.random.PRNGKey(seed)
+    t = jax.random.randint(k, (batch, seq), 0, cfg.vocab)
+    return {"tokens": t, "labels": t}
+
+
+def max_leaf_diff(a, b):
+    return max(float(np.max(np.abs(np.asarray(x) - np.asarray(y))))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def run_steps(runner, batch, n):
+    losses = []
+    for _ in range(n):
+        losses.append(float(runner.train_step(batch)))
+    return losses
+
+
+def compare(cfg, params, batch, mesh, strategy, n, **kw):
+    """(max |loss_plain - loss_shard| over n steps, max final param diff)."""
+    from repro.core import make_runner
+    plain = make_runner(cfg, strategy, params=params, **kw)
+    shard = make_runner(cfg, strategy, params=params, mesh=mesh, **kw)
+    lp = run_steps(plain, batch, n)
+    ls = run_steps(shard, batch, n)
+    dloss = max(abs(a - b) for a, b in zip(lp, ls))
+    return dloss, max_leaf_diff(plain.params, shard.params)
+
+
+def checkpoint_roundtrip(cfg, params, batch, mesh):
+    """save_state/restore_state on a mid-sweep state with sharded leaves."""
+    from repro.core import HiFTConfig, LRSchedule, make_runner
+    from repro.train.checkpoint import restore_state, save_state
+
+    runner = make_runner(cfg, "hift", params=params, mesh=mesh,
+                         hift=HiFTConfig(m=1, strategy="random", seed=3),
+                         schedule=LRSchedule(1e-3))
+    run_steps(runner, batch, 2)  # mid-sweep: queue position + one bundle
+    state = runner.state
+    assert any(d.id > 0 for x in jax.tree.leaves(state.params)
+               for d in x.sharding.device_set), "params are not sharded"
+    with tempfile.TemporaryDirectory() as d:
+        save_state(d, runner.step_count, state)
+        restored = restore_state(d, runner.step_count)
+    assert int(restored.step) == int(state.step)
+    np.testing.assert_array_equal(np.asarray(restored.extra["order"]),
+                                  np.asarray(state.extra["order"]))
+    dparams = max_leaf_diff(restored.params, state.params)
+    dopt = max_leaf_diff(restored.opt_state, state.opt_state)
+
+    # the restored (host-resident) state must keep training when handed back
+    # to the mesh-aware strategy: elastic-resize's base case
+    runner.load_state_dict(state.to_tree())
+    run_steps(runner, batch, 1)
+    return dparams, dopt
+
+
+def main():
+    assert len(jax.devices()) >= 4, jax.devices()
+    from repro.core import HiFTConfig, LRSchedule, make_runner
+    from repro.launch.mesh import mesh_from_spec
+    from repro.models import transformer as T
+
+    cfg = tiny_cfg()
+    params = T.init(cfg, jax.random.PRNGKey(0))
+    batch = make_batch(cfg)
+    mesh = mesh_from_spec("2x2")
+    assert dict(zip(mesh.axis_names, mesh.devices.shape)) == \
+        {"data": 2, "model": 2}
+
+    out = {}
+    sgd = {"optimizer": "sgd", "schedule": LRSchedule(1e-2)}
+    adamw = {"optimizer": "adamw", "schedule": LRSchedule(1e-3)}
+
+    # SGD updates are linear in the gradient, so sharded == unsharded up to
+    # reduction order: tight tolerance.
+    k = len(make_runner(cfg, "hift", params=params, **sgd).groups)
+    out["hift_sgd"] = compare(cfg, params, batch, mesh, "hift", k + 1,
+                              hift=HiFTConfig(m=1), **sgd)
+    out["fpft_sgd"] = compare(cfg, params, batch, mesh, "fpft", 3, **sgd)
+
+    # AdamW divides by sqrt(v): near-zero second moments amplify reduction-
+    # order noise, so params get a looser bound while losses stay tight.
+    out["hift_adamw"] = compare(cfg, params, batch, mesh, "hift", k + 1,
+                                hift=HiFTConfig(m=1), **adamw)
+    out["fpft_adamw"] = compare(cfg, params, batch, mesh, "fpft", 3, **adamw)
+
+    # MeZO: sharded steps force the partitionable PRNG, so run the unsharded
+    # baseline under the same stream for an apples-to-apples comparison.
+    with jax.threefry_partitionable(True):
+        out["mezo"] = compare(cfg, params, batch, mesh, "mezo", 3,
+                              schedule=LRSchedule(1e-3))
+
+    out["ckpt"] = checkpoint_roundtrip(cfg, params, batch, mesh)
+    print(json.dumps(out))
+
+
+if __name__ == "__main__":
+    main()

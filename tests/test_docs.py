@@ -1,0 +1,35 @@
+"""The docs tree stays healthy: tools/check_docs.py (also run by the CI
+docs job) finds no dead links and no broken python fences, and the front
+door + the three core docs exist."""
+import importlib.util
+from pathlib import Path
+
+_REPO = Path(__file__).resolve().parent.parent
+
+
+def _load_checker():
+    spec = importlib.util.spec_from_file_location(
+        "check_docs", _REPO / "tools" / "check_docs.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_docs_tree_exists():
+    for f in ("README.md", "docs/architecture.md", "docs/strategies.md",
+              "docs/sharding.md"):
+        assert (_REPO / f).exists(), f
+
+
+def test_docs_clean():
+    problems = _load_checker().check(_REPO)
+    assert problems == []
+
+
+def test_checker_catches_problems(tmp_path):
+    (tmp_path / "README.md").write_text(
+        "[gone](missing.md)\n\n```python\ndef broken(:\n```\n")
+    problems = _load_checker().check(tmp_path)
+    assert len(problems) == 2
+    assert any("dead link" in p for p in problems)
+    assert any("does not compile" in p for p in problems)

@@ -1,0 +1,123 @@
+"""Docs health check: dead links + python code-fence compile/doctest.
+
+    python tools/check_docs.py [root]
+
+Scans README.md and docs/**/*.md for
+
+- **dead local links**: every markdown link or image whose target is not
+  an URL/anchor must resolve to an existing file or directory relative to
+  the linking document;
+- **broken python fences**: every ```python code fence must at least
+  byte-compile; fences containing ``>>>`` prompts additionally run through
+  ``doctest`` (so examples with expected output are executed and checked).
+
+Exit code 0 = clean; 1 = problems (one line each on stderr). Run by the CI
+docs job and by tests/test_docs.py, so a PR cannot land docs that point
+nowhere or snippets that do not parse.
+"""
+from __future__ import annotations
+
+import doctest
+import re
+import sys
+from pathlib import Path
+
+# [text](target) and ![alt](target); target up to the first unescaped ')'
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_FENCE = re.compile(r"^```(\w*)\s*$")
+_EXTERNAL = ("http://", "https://", "mailto:", "ftp://")
+
+
+def doc_files(root: Path) -> list[Path]:
+    files = []
+    if (root / "README.md").exists():
+        files.append(root / "README.md")
+    files += sorted((root / "docs").rglob("*.md")) if (root / "docs").exists() \
+        else []
+    return files
+
+
+def _split_fences(text: str) -> tuple[list[tuple[int, str, str]], str]:
+    """Returns ([(first_lineno, lang, source)...], text_outside_fences)."""
+    fences, outside = [], []
+    lines = text.splitlines()
+    i = 0
+    while i < len(lines):
+        m = _FENCE.match(lines[i])
+        if not m:
+            outside.append(lines[i])
+            i += 1
+            continue
+        lang, start = m.group(1).lower(), i + 1
+        j = start
+        while j < len(lines) and not lines[j].startswith("```"):
+            j += 1
+        fences.append((start + 1, lang, "\n".join(lines[start:j])))
+        i = j + 1
+    return fences, "\n".join(outside)
+
+
+def check_links(md: Path, text: str, root: Path) -> list[str]:
+    problems = []
+    for m in _LINK.finditer(text):
+        target = m.group(1)
+        if target.startswith(_EXTERNAL) or target.startswith("#"):
+            continue
+        path = target.split("#", 1)[0]
+        if not path:
+            continue
+        resolved = (root if path.startswith("/") else md.parent) / \
+            path.lstrip("/")
+        if not resolved.exists():
+            problems.append(f"{md.relative_to(root)}: dead link -> {target}")
+    return problems
+
+
+def check_fences(md: Path, fences, root: Path) -> list[str]:
+    problems = []
+    for lineno, lang, src in fences:
+        if lang not in ("python", "py"):
+            continue
+        name = f"{md.relative_to(root)}:{lineno}"
+        try:
+            compile(src, name, "exec")
+        except SyntaxError as e:
+            problems.append(f"{name}: python fence does not compile: {e}")
+            continue
+        if ">>>" in src:
+            runner = doctest.DocTestRunner(verbose=False)
+            test = doctest.DocTestParser().get_doctest(
+                src, {}, name, str(md), lineno)
+            runner.run(test)
+            if runner.failures:
+                problems.append(f"{name}: doctest failed "
+                                f"({runner.failures} example(s))")
+    return problems
+
+
+def check(root: Path) -> list[str]:
+    files = doc_files(root)
+    if not files:
+        return [f"no README.md or docs/ under {root}"]
+    problems = []
+    for md in files:
+        text = md.read_text(encoding="utf-8")
+        fences, outside = _split_fences(text)
+        problems += check_links(md, outside, root)
+        problems += check_fences(md, fences, root)
+    return problems
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    root = Path(argv[0]).resolve() if argv else Path(__file__).resolve().parents[1]
+    problems = check(root)
+    for p in problems:
+        print(p, file=sys.stderr)
+    n = len(doc_files(root))
+    print(f"check_docs: {n} file(s), {len(problems)} problem(s)")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
