@@ -1,5 +1,8 @@
 """Paper Tables 8-12 analogue: #Trainable/#Para/#Gra/#Sta/#PGS for
-FPFT vs HiFT across optimizers and precisions, per model.
+FPFT vs HiFT across optimizers and precisions, per model — plus the
+gradient-free (mezo) and fused-backward (lomo) registry strategies, whose
+rows show #Sta = 0 and #Gra = 0 / one-fused-unit respectively (they are
+optimizer-independent, so they print once per precision under "sgd").
 
 Validates the paper's headline numbers:
   - RoBERTa-base  FPFT fp32 AdamW #PGS ~1.86 GB, HiFT ~0.90 GB (Table 8)
@@ -37,9 +40,11 @@ def run(csv=True):
         cfg, units, shapes = shapes_for(arch)
         for opt in OPTIMIZERS:
             for prec in PRECISIONS:
-                for mode in ["fpft", "hift"]:
+                for mode in ["fpft", "hift", "mezo", "lomo"]:
                     if mode == "fpft" and prec == "mixed_hi":
                         continue
+                    if mode in ("mezo", "lomo") and opt != "sgd":
+                        continue   # no optimizer state: one row per precision
                     t0 = time.time()
                     rep = analyze(shapes, units, optimizer=opt,
                                   precision=prec, mode=mode, m=1)
@@ -75,7 +80,18 @@ def check_paper_claims():
     rep_h = analyze(shapes, units, optimizer="adamw", precision="fp32", mode="hift")
     assert abs(rep_f.para_mb - 475.49) / 475.49 < 0.05, rep_f.para_mb
     assert rep_h.peak_trainable < 0.35 * rep_f.n_params
-    print("paper-claims: OK (Appendix B eqs, Table 8/12 columns within tol)")
+
+    # LOMO (fused backward): no optimizer state, grads bounded by one unit
+    cfg, units, shapes = shapes_for("llama2_7b")
+    rep_f = analyze(shapes, units, optimizer="sgd", precision="fp32", mode="fpft")
+    rep_l = analyze(shapes, units, optimizer="sgd", precision="fp32", mode="lomo")
+    assert rep_l.state_mb == 0.0, rep_l.state_mb
+    assert rep_l.peak_trainable == rep_l.n_params      # full-parameter
+    assert rep_l.grad_mb < 0.1 * rep_f.grad_mb, (rep_l.grad_mb, rep_f.grad_mb)
+    rep_z = analyze(shapes, units, optimizer="sgd", precision="fp32", mode="mezo")
+    assert rep_z.grad_mb == 0.0 and rep_z.state_mb == 0.0
+    print("paper-claims: OK (Appendix B eqs, Table 8/12 columns, LOMO/MeZO "
+          "no-grad-tree rows within tol)")
     return True
 
 

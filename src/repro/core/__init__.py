@@ -3,9 +3,10 @@ from repro.core.grouping import Group, make_groups, order_groups, split_params, 
 from repro.core.scheduler import LRSchedule
 from repro.core.strategy import (TrainState, Strategy, Runner,
                                  HiFTConfig, LiSAConfig, MeZOConfig,
-                                 HiFTStrategy, FPFTStrategy, LiSAStrategy,
-                                 MeZOStrategy, build_fpft_step,
-                                 fpft_step_body, write_back,
+                                 LOMOConfig, HiFTStrategy, FPFTStrategy,
+                                 LiSAStrategy, MeZOStrategy, LOMOStrategy,
+                                 build_fpft_step, fpft_step_body,
+                                 lomo_step_body, write_back,
                                  host_put, device_put_async)
 from repro.core import registry
 from repro.core.registry import (get_strategy_cls, make_runner, make_strategy,

@@ -97,18 +97,38 @@ class _Accountant:
 def analyze(shapes: PyTree, units: Sequence[Unit], *, optimizer: str = "adamw",
             precision: str = "fp32", mode: str = "hift", m: int = 1) -> MemoryReport:
     """shapes: params tree or jax.eval_shape(init) tree.
-    precision: fp32 | mixed | mixed_hi.  mode: fpft | hift."""
+    precision: fp32 | mixed | mixed_hi.  mode: fpft | hift | mezo | lomo.
+
+    Per-mode accounting (matching the registry strategies' own
+    ``peak_trainable_params`` / ``peak_grad_params``):
+      - fpft: everything trainable, full grad tree, full optimizer state.
+      - hift: one group of m units trainable; grads + state for it only.
+      - mezo: everything trainable but NO gradients and NO optimizer state
+        (two forward passes — memory ~= inference).
+      - lomo: everything trainable, no optimizer state, and gradient
+        residency bounded by the largest single unit — the fused backward
+        consumes each layer's gradient before the next materializes, so the
+        full grad tree of FPFT/SGD never exists."""
     acc = _Accountant(shapes, units)
     n = acc.total()
     groups = make_groups(acc.units, m)
-    k = len(groups)
 
     if mode == "fpft":
+        peak, gsize = n, n
+    elif mode == "hift":
+        peak = max(acc.group_params(g) for g in groups)
+        gsize = peak
+    elif mode == "mezo":
+        peak, gsize = n, 0
+    elif mode == "lomo":
         peak = n
-        groups_for_state = None
+        gsize = max(acc.group_params(g) for g in make_groups(acc.units, 1))
     else:
-        sizes = [acc.group_params(g) for g in groups]
-        peak = max(sizes)
+        raise ValueError(mode)
+    # fp32 master copies under Mixed^Hi track gradient residency: whatever
+    # is being updated at one instant (hift: the active group; lomo: one
+    # fused unit; mezo: nothing is grad-updated)
+    master = gsize if mode in ("mezo", "lomo") else peak
 
     # --- weights resident (#Para) ---
     if precision == "fp32":
@@ -116,13 +136,15 @@ def analyze(shapes: PyTree, units: Sequence[Unit], *, optimizer: str = "adamw",
     elif precision == "mixed":
         para = 4 * n + 2 * n            # fp32 master + bf16 compute copy
     elif precision == "mixed_hi":
-        para = 2 * n + 4 * peak         # bf16 resident + fp32 master of active
+        para = 2 * n + 4 * master       # bf16 resident + fp32 master of active
     else:
         raise ValueError(precision)
 
-    grad = 4 * peak                      # fp32 grads of trainable params
+    grad = 4 * gsize                     # fp32 grads LIVE at peak
 
-    if optimizer == "adafactor":
+    if mode in ("mezo", "lomo"):
+        state = 0                        # no optimizer state by construction
+    elif optimizer == "adafactor":
         if mode == "fpft":
             whole = Group(0, tuple(acc.units),
                           tuple(u.key for u in acc.units if u.kind == "dense"),

@@ -1,4 +1,5 @@
-"""Unified Strategy API: one functional surface for HiFT / FPFT / MeZO / LiSA.
+"""Unified Strategy API: one functional surface for HiFT / FPFT / MeZO /
+LiSA / LOMO.
 
 The paper's claim is that HiFT is an optimizer-independent *strategy*, not a
 bespoke trainer — this module makes strategies first-class:
@@ -26,6 +27,12 @@ Built-in strategies (registered in ``repro.core.registry``):
   - ``mezo`` : zeroth-order SPSA (``repro.optim.mezo``) — no gradients, no
                optimizer state; ``opt_state`` stays empty and the rng rides
                in ``extra`` (the paper's memory floor baseline).
+  - ``lomo`` : LOMO-style fused backward ("Full Parameter Fine-tuning for
+               Large Language Models with Limited Resources", Lv et al.
+               2023) — the SGD(+clip) update is fused into the backward
+               pass, consuming each layer's gradient in cotangent order, so
+               a full gradient tree never materializes; like MeZO the
+               optimizer bundle is empty.
 
 Every strategy is also **mesh-aware**: pass ``mesh=`` (a
 ``jax.sharding.Mesh`` with ``data``/``model`` axes, e.g. from
@@ -43,6 +50,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import warnings
 from typing import Any, Callable, Optional
 
 import jax
@@ -57,6 +65,7 @@ from repro.core.grouping import (Group, group_cut, make_groups, merge_params,
 from repro.core.registry import register_strategy
 from repro.core.scheduler import LRSchedule
 from repro.models import get_family, unit_first_depth
+from repro.optim import base as opt_base
 from repro.optim.base import Optimizer
 from repro.optim.mezo import mezo_step
 from repro.optim.mixed_precision import FP32, Policy
@@ -67,6 +76,9 @@ Metrics = dict
 
 # --------------------------------------------------------------- placement
 
+_HOST_PUT_UNAVAILABLE = False
+
+
 def host_put(tree: PyTree, shardings: PyTree = None) -> PyTree:
     """Move a pytree to host memory (the paper's MoveOptimizerState2CPU).
 
@@ -74,18 +86,34 @@ def host_put(tree: PyTree, shardings: PyTree = None) -> PyTree:
     async DMA; on the CPU backend arrays are already host-resident.  When a
     ``shardings`` tree is given (mesh-sharded bundles), each leaf keeps its
     partitioning and only the memory kind changes, so a sharded optimizer
-    bundle offloads without gathering."""
+    bundle offloads without gathering.
+
+    Backends without pinned_host support raise on the placement — only those
+    expected memory-kind errors are caught, and the FIRST one warns that the
+    state stays device-resident (the paper's offload memory saving does not
+    apply then).  Anything else propagates: silently keeping multi-GB
+    optimizer state on device would defeat the offload claim unnoticed."""
+    global _HOST_PUT_UNAVAILABLE
+    dev = jax.devices()[0]
+    if dev.platform == "cpu" or _HOST_PUT_UNAVAILABLE:
+        return tree
     try:
-        dev = jax.devices()[0]
-        if dev.platform == "cpu":
-            return tree
         if shardings is not None:
             host = jax.tree.map(lambda s: s.with_memory_kind("pinned_host"),
                                 shardings)
             return jax.device_put(tree, host)
         sharding = jax.sharding.SingleDeviceSharding(dev, memory_kind="pinned_host")
         return jax.device_put(tree, sharding)
-    except Exception:
+    except (ValueError, NotImplementedError, RuntimeError) as e:
+        # the memory-kind errors backends actually raise: ValueError /
+        # XlaRuntimeError (a RuntimeError) for an unknown or unsupported
+        # memory kind, NotImplementedError from older plugin backends
+        _HOST_PUT_UNAVAILABLE = True
+        warnings.warn(
+            f"pinned_host offload unavailable on {dev.platform!r} ({e}); "
+            "optimizer state stays device-resident — the paper's offload "
+            "memory saving does not apply on this backend",
+            RuntimeWarning, stacklevel=2)
         return tree
 
 
@@ -142,6 +170,14 @@ class LiSAConfig:
 class MeZOConfig:
     eps: float = 1e-3                 # SPSA perturbation scale
     seed: int = 0                     # default rng when init() gets none
+
+
+@dataclasses.dataclass
+class LOMOConfig:
+    grad_clip: float = 1.0            # global-norm clip threshold (0 = off);
+                                      # >0 adds the paper's second backward
+                                      # sweep to compute the norm first
+    weight_decay: float = 0.0         # decoupled, as in repro.optim.sgd
 
 
 # -------------------------------------------------------------- TrainState
@@ -238,6 +274,11 @@ class Strategy:
 
     name = "base"
     k = 1   # steps per LR cycle (HiFT: number of groups; others: 1)
+    # how core.memory_model accounts this strategy (tests/test_strategy_
+    # conformance.py cross-checks analyze(mode=memory_mode, m=memory_m)
+    # against peak_trainable_params / peak_grad_params)
+    memory_mode = "fpft"
+    memory_m = 1
 
     def __init__(self, cfg, optimizer: Optional[Optimizer], *,
                  schedule: Optional[LRSchedule] = None, policy: Policy = FP32,
@@ -316,6 +357,13 @@ class Strategy:
         """Max #params trainable in any single step (paper Fig. 6e)."""
         return tree_size(params)
 
+    def peak_grad_params(self, params: PyTree) -> int:
+        """Max #params whose gradient is LIVE at any instant of a step
+        (the paper's zeta_3 granularity).  Default: everything trainable is
+        resident at once; MeZO overrides to 0 (no backward) and LOMO to one
+        fused segment (gradients are consumed layer-by-layer)."""
+        return self.peak_trainable_params(params)
+
 
 # --------------------------------------------------- grouped-step machinery
 
@@ -332,6 +380,7 @@ class _GroupedStrategy(Strategy):
 
     use_cut = True
     offload_optimizer = True
+    memory_mode = "hift"
 
     def resident_param_shardings(self, tree: PyTree) -> PyTree:
         return dist_shardings.replicated(tree, self.mesh)
@@ -340,6 +389,7 @@ class _GroupedStrategy(Strategy):
         self.units = self.model.unit_spec(self.cfg)
         self.groups = make_groups(self.units, m)
         self.k = len(self.groups)
+        self.memory_m = m
         # per-group caches: gi -> (jitted step, in_shardings|None) and
         # ("wb", gi) -> jitted sharded write_back
         self._step_fns: dict[Any, tuple[Callable, Any]] = {}
@@ -673,6 +723,7 @@ class MeZOStrategy(Strategy):
     mesh, but not an unsharded run (whose steps keep the legacy stream)."""
 
     name = "mezo"
+    memory_mode = "mezo"
 
     def __init__(self, cfg, optimizer=None, *, mezo: Optional[MeZOConfig] = None,
                  schedule: Optional[LRSchedule] = None, policy: Policy = FP32,
@@ -724,6 +775,248 @@ class MeZOStrategy(Strategy):
             params, loss = fn(*args, key, jnp.asarray(lr, jnp.float32))
         new_state = TrainState(params, state.opt_state, step + 1, state.extra)
         return new_state, {"loss": loss, "lr": lr, "strategy": self.name}
+
+    def peak_grad_params(self, params: PyTree) -> int:
+        return 0            # two forward passes, no backward at all
+
+
+# ------------------------------------------------------------------- LOMO
+
+_tree_sqsum = opt_base.global_sq_norm
+
+
+def _sgd_tree(params: PyTree, grads: PyTree, lr, scale, weight_decay: float):
+    """The exact update of ``repro.optim.sgd`` with pre-scaled (clipped)
+    gradients, applied to one fused segment."""
+    def upd(p, g):
+        g32 = (g * scale).astype(g.dtype).astype(jnp.float32)
+        p32 = p.astype(jnp.float32)
+        return (p32 - lr * (g32 + weight_decay * p32)).astype(p.dtype)
+
+    return jax.tree.map(upd, params, grads)
+
+
+def _lomo_fused_body(cfg, pieces, grad_clip: float,
+                     weight_decay: float) -> Callable:
+    """The genuinely fused step for families exposing ``lomo_pieces``.
+
+    One forward scan saves each layer's input; the backward is a hand-rolled
+    REVERSE scan whose body runs one layer's ``jax.vjp`` (rematerializing
+    that layer's forward, as with remat="layer") and applies the SGD update
+    right there — so at any instant only a single layer's gradient is live,
+    never the stacked (n_layers, ...) grad tree the standard scan transpose
+    would produce.  With ``grad_clip`` > 0 the update needs the global grad
+    norm first, so a norm-only reverse sweep runs before the update sweep
+    (LOMO's two-backward clipping; each sweep still frees every gradient as
+    it goes)."""
+    embed_fn, block_fn, head_loss_fn = pieces
+
+    def step(params, batch, lr):
+        ep, lp, hp = params["embed"], params["layers"], params["head"]
+        h0, embed_vjp = jax.vjp(lambda e: embed_fn(e, batch), ep)
+
+        def fwd(h, layer_p):
+            return block_fn(layer_p, h), h      # save the layer INPUT
+
+        h_out, resid = jax.lax.scan(fwd, h0, lp)
+        loss, head_vjp = jax.vjp(
+            lambda H, E, x: head_loss_fn(H, E, x, batch), hp, ep, h_out)
+        one = jnp.ones_like(loss)
+
+        def layer_vjp(layer_p, h_in, dh):
+            _, vjp = jax.vjp(lambda p, x: block_fn(p, x), layer_p, h_in)
+            return vjp(dh)                      # (g_layer, dh_below)
+
+        def embed_grad(dh0, g_embed_from_head):
+            (g,) = embed_vjp(dh0)               # token-gather cotangent
+            return jax.tree.map(jnp.add, g, g_embed_from_head)
+
+        def norm_sweep():
+            g_head, g_emb_h, dh = head_vjp(one)
+
+            def body(dh, xs):
+                g, dh = layer_vjp(*xs, dh)
+                return dh, _tree_sqsum(g)       # grad reduced, then dead
+
+            dh0, sqs = jax.lax.scan(body, dh, (lp, resid), reverse=True)
+            # the exact global norm needs the ELEMENTWISE embedding-grad sum
+            # (cross term between head-side and gather-side cotangents), so
+            # for tied heads this sweep keeps g_emb_h live alongside one
+            # layer's grad — the only place residency exceeds one segment
+            return (_tree_sqsum(g_head) + jnp.sum(sqs)
+                    + _tree_sqsum(embed_grad(dh0, g_emb_h)))
+
+        def update_sweep(scale):
+            g_head, g_emb_h, dh = head_vjp(one)
+            new_hp = _sgd_tree(hp, g_head, lr, scale, weight_decay)
+            # SGD is linear in the gradient, so the head-side embedding
+            # cotangent (for tied heads a full (vocab, d) buffer; zeros
+            # otherwise) is consumed NOW as its own increment — carrying the
+            # weight-decay term, applied on the ORIGINAL params — instead of
+            # being pinned live across the whole reverse scan waiting for
+            # the gather-side grad.  The post-scan increment then adds no
+            # second decay term, keeping the math one exact SGD step.
+            sq_emb_h = _tree_sqsum(g_emb_h)
+            ep_mid = _sgd_tree(ep, g_emb_h, lr, scale, weight_decay)
+
+            def body(dh, xs):
+                g, dh = layer_vjp(*xs, dh)
+                return dh, (_sgd_tree(xs[0], g, lr, scale, weight_decay),
+                            _tree_sqsum(g))     # grad consumed in-iteration
+
+            dh0, (new_lp, sqs) = jax.lax.scan(body, dh, (lp, resid),
+                                              reverse=True)
+            (g_gather,) = embed_vjp(dh0)
+            new_ep = _sgd_tree(ep_mid, g_gather, lr, scale, 0.0)
+            # reported norm: segment-wise (the tied-head cross term between
+            # the two embedding increments is dropped — keeping it would
+            # pin both buffers; exact for untied heads).  The CLIP scale
+            # never uses this: norm_sweep computes the exact global norm.
+            sq = (_tree_sqsum(g_head) + jnp.sum(sqs) + sq_emb_h
+                  + _tree_sqsum(g_gather))
+            return {"embed": new_ep, "layers": new_lp, "head": new_hp}, sq
+
+        if grad_clip and grad_clip > 0:
+            sq = norm_sweep()
+            new_params, _ = update_sweep(opt_base.clip_scale(grad_clip, sq))
+        else:
+            new_params, sq = update_sweep(jnp.float32(1.0))
+        return new_params, loss, jnp.sqrt(sq)
+
+    return step
+
+
+def _lomo_generic_body(cfg, loss_fn: Callable, compute_dtype, grad_clip: float,
+                       weight_decay: float) -> Callable:
+    """Fallback for families without ``lomo_pieces`` (or a custom loss_fn):
+    one ``jax.vjp`` over the TUPLE of top-level param segments, consumed in
+    cotangent (head-first) order.  Gradient liveness is bounded by the
+    largest top-level segment — coarser than the per-layer fused path, since
+    a stacked trunk's grad arrives as one array from the scan transpose."""
+
+    def step(params, batch, lr):
+        keys = list(params)
+
+        def loss_of(*parts):
+            return loss_fn(cfg, dict(zip(keys, parts)), batch,
+                           compute_dtype=compute_dtype)
+
+        loss, pullback = jax.vjp(loss_of, *(params[key] for key in keys))
+        one = jnp.ones_like(loss)
+
+        def sweep(scale):
+            """One backward; ``scale`` None -> reduce each segment's grad to
+            its squared norm only (nothing retained)."""
+            gparts = pullback(one)
+            sq = jnp.float32(0.0)
+            new = {}
+            for key, g in reversed(list(zip(keys, gparts))):  # cotangent order
+                sq = sq + _tree_sqsum(g)
+                if scale is not None:
+                    new[key] = _sgd_tree(params[key], g, lr, scale,
+                                         weight_decay)
+            return sq, {key: new[key] for key in keys} if scale is not None \
+                else None
+
+        if grad_clip and grad_clip > 0:
+            sq, _ = sweep(None)
+            _, new_params = sweep(opt_base.clip_scale(grad_clip, sq))
+        else:
+            sq, new_params = sweep(jnp.float32(1.0))
+        return new_params, loss, jnp.sqrt(sq)
+
+    return step
+
+
+def lomo_step_body(cfg, policy: Policy = FP32, loss_fn: Optional[Callable] = None,
+                   lomo: Optional[LOMOConfig] = None) -> Callable:
+    """The un-jitted LOMO step ``step(params, batch, lr) -> (new_params,
+    loss, grad_norm)``.  Dispatches to the per-layer fused backward when the
+    model family exposes ``lomo_pieces`` and no custom ``loss_fn`` overrides
+    the forward; otherwise to the segment-wise vjp fallback.
+    ``launch.dryrun`` lowers this body directly for its LOMO cells."""
+    lomo = lomo if lomo is not None else LOMOConfig()
+    model = get_family(cfg)
+    if loss_fn is None and hasattr(model, "lomo_pieces"):
+        pieces = model.lomo_pieces(cfg, compute_dtype=policy.compute_dtype)
+        return _lomo_fused_body(cfg, pieces, lomo.grad_clip, lomo.weight_decay)
+    return _lomo_generic_body(cfg, loss_fn or model.loss_fn,
+                              policy.compute_dtype, lomo.grad_clip,
+                              lomo.weight_decay)
+
+
+@register_strategy("lomo")
+class LOMOStrategy(Strategy):
+    """LOMO (Lv et al. 2023): full-parameter SGD with the update fused into
+    the backward pass.  Numerically this IS one plain SGD step on all
+    parameters — grads are taken at the pre-step params, clipped by global
+    norm, and applied — but no full gradient tree is ever resident: each
+    fused segment's gradient is consumed (param updated, buffer dead) before
+    the next one materializes, and like MeZO the optimizer bundle is empty.
+    The memory story is therefore params + one segment's grads, against
+    FPFT/SGD's params + all grads (``memory_model`` mode="lomo").
+
+    The optimizer argument is accepted for registry uniformity and ignored;
+    SGD hyper-parameters live in :class:`LOMOConfig`."""
+
+    name = "lomo"
+    memory_mode = "lomo"
+
+    def __init__(self, cfg, optimizer=None, *, lomo: Optional[LOMOConfig] = None,
+                 schedule: Optional[LRSchedule] = None, policy: Policy = FP32,
+                 loss_fn: Optional[Callable] = None, mesh=None,
+                 param_sharding_fn: Optional[Callable] = None):
+        super().__init__(cfg, optimizer, schedule=schedule, policy=policy,
+                         loss_fn=loss_fn, mesh=mesh,
+                         param_sharding_fn=param_sharding_fn)
+        self.lomo = lomo if lomo is not None else LOMOConfig()
+        self._fused = loss_fn is None and hasattr(self.model, "lomo_pieces")
+        self._body = lomo_step_body(cfg, policy=self.policy, loss_fn=loss_fn,
+                                    lomo=self.lomo)
+        self._step_fn: Optional[tuple[Callable, Any]] = None
+
+    def init(self, params: PyTree, rng=None) -> TrainState:
+        if self.policy.name in ("bf16",):
+            params = tree_cast(params, self.policy.param_dtype)
+        return TrainState(self.place_params(params), {}, 0, {})
+
+    def _fn(self, example=None) -> tuple[Callable, Any]:
+        if self._step_fn is None:
+            donate = () if jax.devices()[0].platform == "cpu" else (0,)
+            if self.sharded and example is not None:
+                ins, outs = dist_shardings.lomo_step_shardings(
+                    self.mesh, *example,
+                    param_shardings_tree=self.param_shardings(example[0]))
+                self._step_fn = jax.jit(self._body, donate_argnums=donate,
+                                        in_shardings=ins,
+                                        out_shardings=outs), ins
+            else:
+                self._step_fn = jax.jit(self._body,
+                                        donate_argnums=donate), None
+        return self._step_fn
+
+    def step(self, state: TrainState, batch) -> tuple[TrainState, Metrics]:
+        step = int(state.step)
+        lr = self.schedule.at_cycle(step)
+        with self._trace_ctx():
+            fn, ins = self._fn((state.params, batch))
+            args = (state.params, batch)
+            if ins is not None:
+                args = jax.device_put(args, ins[:2])
+            params, loss, gnorm = fn(*args, jnp.asarray(lr, jnp.float32))
+        new_state = TrainState(params, state.opt_state, step + 1, state.extra)
+        return new_state, {"loss": loss, "lr": lr, "strategy": self.name,
+                           "grad_norm": gnorm}
+
+    def peak_grad_params(self, params: PyTree) -> int:
+        if self._fused:
+            # per-unit liveness: the reverse scan holds one layer's grads
+            units = self.model.unit_spec(self.cfg)
+            return max(tree_size(split_params(params, g)[0])
+                       for g in make_groups(units, 1))
+        # generic path: one top-level segment at a time (a stacked trunk's
+        # grad is a single array from the scan transpose)
+        return max(tree_size(sub) for sub in params.values())
 
 
 # ------------------------------------------------------------------ Runner

@@ -195,3 +195,20 @@ def mezo_step_shardings(mesh, params: PyTree, batch: PyTree,
     p = param_shardings_tree if param_shardings_tree is not None \
         else param_shardings(params, mesh)
     return (p, batch_shardings(batch, mesh), scalar, scalar), (p, scalar)
+
+
+def lomo_step_shardings(mesh, params: PyTree, batch: PyTree,
+                        param_shardings_tree: PyTree = None):
+    """``(in_shardings, out_shardings)`` for the LOMO fused-backward step
+    ``step(params, batch, lr) -> (new_params, loss, grad_norm)``.
+
+    Params shard over ``model`` in and out with IDENTICAL specs — the step
+    donates its param buffers (the whole tree updates every step, so unlike
+    the grouped strategies nothing else aliases them) and the matching specs
+    keep the donation copy-free.  The batch splits over the data axes; the
+    loss, lr and the global grad-norm (a psum over every shard's partial
+    square-sum) replicate."""
+    scalar = NamedSharding(mesh, P())
+    p = param_shardings_tree if param_shardings_tree is not None \
+        else param_shardings(params, mesh)
+    return (p, batch_shardings(batch, mesh), scalar), (p, scalar, scalar)

@@ -10,10 +10,10 @@ For each cell this proves, without real hardware:
   - the collective schedule is sane (parsed from the partitioned HLO).
 
 Train shapes lower the per-group HiFT step (the paper's technique);
-``--strategy fpft`` lowers the standard FPFT step for comparison (strategy
-names resolve through ``repro.core.registry``).  Decode shapes lower
-``serve_step`` (one token against a seq_len KV cache); prefill shapes lower
-the prompt pass.
+``--strategy fpft`` lowers the standard FPFT step for comparison and
+``--strategy lomo`` the fused-backward step (strategy names resolve through
+``repro.core.registry``).  Decode shapes lower ``serve_step`` (one token
+against a seq_len KV cache); prefill shapes lower the prompt pass.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --arch internlm2-1.8b --shape train_4k
@@ -156,8 +156,8 @@ def lower_train_cell(cfg: ArchConfig, shape: ShapeConfig, mesh,
     is built here rather than through ``Strategy.step`` — but the step BODY
     mirrors ``repro.core.strategy`` exactly (FPFTStrategy's full step; the
     HiFT/Mixed^Hi per-group step with the paper's backward cut)."""
-    if strategy not in ("hift", "fpft"):
-        raise ValueError(f"dry-run lowers hift|fpft cells, got {strategy!r}")
+    if strategy not in ("hift", "fpft", "lomo"):
+        raise ValueError(f"dry-run lowers hift|fpft|lomo cells, got {strategy!r}")
     fpft = strategy == "fpft"
     model = get_family(cfg)
     params_s = _abstract_params(cfg)
@@ -167,6 +167,22 @@ def lower_train_cell(cfg: ArchConfig, shape: ShapeConfig, mesh,
     bshard = batch_shardings(batch_s, mesh)
     lr_s = jax.ShapeDtypeStruct((), jnp.float32)
     lr_shard = NamedSharding(mesh, P())
+
+    if strategy == "lomo":
+        # the fused-backward step: full-param SGD fused into the backward,
+        # bf16 compute, no optimizer state anywhere in the cell.  Lowered
+        # with grad_clip=0 (single reverse sweep) so the HLO matches the
+        # analytic cost model's one-backward accounting; clipping would add
+        # the norm-only sweep and roughly double the backward FLOPs.
+        from repro.core.strategy import LOMOConfig, lomo_step_body
+        from repro.optim.mixed_precision import BF16
+        step = lomo_step_body(cfg, policy=BF16, lomo=LOMOConfig(grad_clip=0.0))
+        fn = jax.jit(step, in_shardings=(pshard, bshard, lr_shard),
+                     out_shardings=(pshard, NamedSharding(mesh, P()),
+                                    NamedSharding(mesh, P())))
+        with mesh, activation_sharding(mesh, _daxes(mesh)):
+            lowered = fn.lower(params_s, batch_s, lr_s)
+        return lowered, {"mode": "lomo"}
 
     if fpft:
         def step(params, opt_state, batch, lr):
@@ -311,9 +327,15 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool = False,
 
     # analytic cost model
     if shape.kind == "train":
-        cut = meta.get("cut") or 0
-        cost = costmodel.train_cost(cfg, shape, cut=cut, active_layers=1,
-                                    head_active=False)
+        if meta.get("mode") == "lomo":
+            # full backward, every layer's dW computed (then fused away)
+            cost = costmodel.train_cost(cfg, shape, cut=None,
+                                        active_layers=cfg.n_layers,
+                                        head_active=True, embed_active=True)
+        else:
+            cut = meta.get("cut") or 0
+            cost = costmodel.train_cost(cfg, shape, cut=cut, active_layers=1,
+                                        head_active=False)
     else:
         cost = costmodel.serve_cost(cfg, shape, shape.kind)
 
@@ -382,7 +404,8 @@ def main():
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--both-meshes", action="store_true")
-    ap.add_argument("--strategy", default="hift", choices=["hift", "fpft"],
+    ap.add_argument("--strategy", default="hift",
+                    choices=["hift", "fpft", "lomo"],
                     help="which train step to lower for train cells")
     ap.add_argument("--fpft", action="store_true",
                     help="deprecated alias for --strategy fpft")

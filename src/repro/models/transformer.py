@@ -140,6 +140,43 @@ def loss_fn(cfg: ArchConfig, params: PyTree, batch, cut: Optional[int] = None,
                                    chunk=cfg.ce_chunk or None)
 
 
+def lomo_pieces(cfg: ArchConfig, compute_dtype=jnp.bfloat16):
+    """Segmented forward for the LOMO fused-backward strategy.
+
+    Returns ``(embed_fn, block_fn, head_loss_fn)`` such that
+
+        h0   = embed_fn(params["embed"], batch)
+        h    = block_fn(params["layers"][i], h)        # i = 0..n_layers-1
+        loss = head_loss_fn(params["head"], params["embed"], h, batch)
+
+    reproduces ``loss_fn(cfg, params, batch)`` exactly (same ops: the rope
+    table, layer-IO constraints and the chunked CE all match ``apply``).
+    The strategy drives ``jax.vjp`` through these segments one at a time so
+    each layer's gradient is consumed (SGD-updated) inside one backward-scan
+    iteration instead of accumulating into a full grad tree.  The embedding
+    appears in ``head_loss_fn`` because tied-embedding heads read it."""
+    _, norm = _norm_fns(cfg)
+
+    def embed_fn(embed_p, batch):
+        return constrain_layer_io(
+            _embed_in(cfg, {"embed": embed_p}, batch).astype(compute_dtype))
+
+    def block_fn(layer_p, h):
+        cos, sin = _rope(cfg, h.shape[1])
+        return constrain_layer_io(_block(cfg, cos, sin)(h, layer_p))
+
+    def head_loss_fn(head_p, embed_p, h, batch):
+        from repro.models.losses import chunked_next_token_xent
+        h = norm(head_p["final_norm"], h)
+        if cfg.vision_tokens > 0:
+            h = h[:, cfg.vision_tokens:]
+        w = embed_p["tok"].T if cfg.tie_embeddings else head_p["w"]
+        return chunked_next_token_xent(h, w, batch["labels"],
+                                       chunk=cfg.ce_chunk or None)
+
+    return embed_fn, block_fn, head_loss_fn
+
+
 # ---------------------------------------------------------------- serving
 
 def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16):

@@ -32,12 +32,24 @@ def _tmap(f, *trees):
     return jax.tree.map(f, *trees)
 
 
+def global_sq_norm(tree: PyTree) -> jnp.ndarray:
+    """Sum of squared leaf elements in fp32 (the global grad norm, squared).
+    Shared by :func:`clip_by_global_norm` and the LOMO fused backward, whose
+    bit-equality with fpft+sgd depends on using the same formula."""
+    return sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+               for g in jax.tree.leaves(tree))
+
+
+def clip_scale(max_norm: float, sq: jnp.ndarray) -> jnp.ndarray:
+    """``min(1, max_norm/||g||)`` from a precomputed squared norm — the one
+    place the clip epsilon lives."""
+    return jnp.minimum(1.0, max_norm / (jnp.sqrt(sq) + 1e-12))
+
+
 def clip_by_global_norm(grads: PyTree, max_norm: float) -> PyTree:
     if max_norm is None or max_norm <= 0:
         return grads
-    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
-    gnorm = jnp.sqrt(sq)
-    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-12))
+    scale = clip_scale(max_norm, global_sq_norm(grads))
     return _tmap(lambda g: (g * scale).astype(g.dtype), grads)
 
 

@@ -120,6 +120,12 @@ def main():
         out["mezo"] = compare(cfg, params, batch, mesh, "mezo", 3,
                               schedule=LRSchedule(1e-3))
 
+    # LOMO: fused backward is plain SGD (+global-norm clip) underneath, so
+    # like hift/fpft+sgd only reduction-order noise separates the paths —
+    # the clip scale and the per-layer updates are linear in the grads.
+    out["lomo"] = compare(cfg, params, batch, mesh, "lomo", 3,
+                          schedule=LRSchedule(1e-2))
+
     out["ckpt"] = checkpoint_roundtrip(cfg, params, batch, mesh)
     print(json.dumps(out))
 

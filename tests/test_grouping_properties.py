@@ -1,0 +1,106 @@
+"""Property tests for the grouping invariants every grouped strategy (and
+LOMO's per-unit accounting) silently relies on: over seeded-random unit
+layouts — multiple stacked segments of random depth interleaved with dense
+units, random m —
+
+  - ``split_params`` -> ``write_back`` is the IDENTITY for every group
+    (stacked-range slices land back exactly where they came from);
+  - the groups PARTITION the tree: every leaf element is owned by exactly
+    one group (active sizes sum to the tree size, labels are disjoint).
+
+``tests/test_properties.py`` covers the single-stacked-segment layout; this
+file drives the general shape of the machinery.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.common.pytree import flatten_with_paths, tree_size
+from repro.core.grouping import make_groups, split_params
+from repro.core.strategy import write_back
+from repro.models.base import dense_unit, stacked_units
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+# A layout is a sequence of (kind, depth) segments; units are emitted in
+# order, so stacked ranges stay contiguous exactly as models declare them.
+_SEGMENT = st.one_of(
+    st.tuples(st.just("dense"), st.just(1)),
+    st.tuples(st.just("stacked"), st.integers(1, 6)),
+)
+_LAYOUT = st.lists(_SEGMENT, min_size=1, max_size=5)
+
+
+def _build(layout, seed):
+    """(units, params) for a layout; every leaf value unique so a slice
+    written back in the wrong place cannot cancel out."""
+    rng = np.random.RandomState(seed)
+    units, params = [], {}
+    for i, (kind, depth) in enumerate(layout):
+        key = f"{kind[0]}{i}"
+        if kind == "dense":
+            units.append(dense_unit(key))
+            params[key] = {"w": jnp.asarray(rng.randn(3, 2)),
+                           "b": jnp.asarray(rng.randn(2))}
+        else:
+            units.extend(stacked_units(key, depth))
+            params[key] = {"w": jnp.asarray(rng.randn(depth, 2, 3)),
+                           "s": jnp.asarray(rng.randn(depth))}
+    return units, params
+
+
+@given(layout=_LAYOUT, m=st.integers(1, 8), seed=st.integers(0, 10**6))
+def test_split_write_back_is_identity(layout, m, seed):
+    units, params = _build(layout, seed)
+    flat = flatten_with_paths(params)
+    for group in make_groups(units, m):
+        active, _ = split_params(params, group)
+        back = flatten_with_paths(write_back(params, active, group))
+        assert set(back) == set(flat)
+        for path in flat:
+            np.testing.assert_array_equal(np.asarray(flat[path]),
+                                          np.asarray(back[path]),
+                                          err_msg=f"{group.label()} @ {path}")
+
+
+@given(layout=_LAYOUT, m=st.integers(1, 8), seed=st.integers(0, 10**6))
+def test_groups_partition_tree_exactly_once(layout, m, seed):
+    units, params = _build(layout, seed)
+    groups = make_groups(units, m)
+    # ceil(n/m) groups, every unit exactly once, in declaration order
+    assert len(groups) == (len(units) + m - 1) // m
+    assert [u.label() for g in groups for u in g.units] == \
+        [u.label() for u in units]
+    # active sub-trees tile the param tree: sizes sum to the total and the
+    # per-group (key, range) ownership is disjoint
+    actives = [split_params(params, g)[0] for g in groups]
+    assert sum(tree_size(a) for a in actives) == tree_size(params)
+    owned = []
+    for g in groups:
+        owned += [(k, None) for k in g.dense_keys]
+        owned += [(k, i) for k, lo, hi in g.stacked_ranges
+                  for i in range(lo, hi)]
+    assert len(owned) == len(set(owned)), "overlapping group ownership"
+
+
+@given(layout=_LAYOUT, m=st.integers(1, 8), seed=st.integers(0, 10**6))
+def test_sequential_write_back_composes_to_full_update(layout, m, seed):
+    """Writing back a MODIFIED active tree for every group in turn (one HiFT
+    sweep) updates every leaf element exactly once — no element is touched
+    twice, none is missed."""
+    units, params = _build(layout, seed)
+    out = params
+    for group in make_groups(units, m):
+        active, _ = split_params(out, group)
+        out = write_back(out, jax.tree.map(lambda x: x + 1.0, active), group)
+    flat, done = flatten_with_paths(params), flatten_with_paths(out)
+    for path in flat:
+        np.testing.assert_allclose(np.asarray(done[path]),
+                                   np.asarray(flat[path]) + 1.0,
+                                   err_msg=path)

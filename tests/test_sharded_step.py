@@ -1,6 +1,6 @@
-"""Sharded strategy steps: mesh-compiled HiFT/FPFT/MeZO must match the
-unsharded path, and TrainState must round-trip through checkpointing with
-sharded leaves.
+"""Sharded strategy steps: mesh-compiled HiFT/FPFT/MeZO/LOMO must match
+the unsharded path, and TrainState must round-trip through checkpointing
+with sharded leaves.
 
 The multi-device assertions run in a subprocess (tests/sharded_worker.py)
 because ``--xla_force_host_platform_device_count`` must be set before jax
@@ -104,6 +104,14 @@ def test_sharded_matches_unsharded_adamw(worker_out):
 
 def test_sharded_mezo_matches_partitionable_stream(worker_out):
     dloss, dparam = worker_out["mezo"]
+    assert dloss < 1e-4, dloss
+    assert dparam < 1e-4, dparam
+
+
+def test_sharded_lomo_matches_unsharded(worker_out):
+    # fused backward == plain SGD underneath: tight tolerance, like the
+    # other linear-optimizer paths
+    dloss, dparam = worker_out["lomo"]
     assert dloss < 1e-4, dloss
     assert dparam < 1e-4, dparam
 

@@ -7,11 +7,11 @@ import pytest
 
 from conftest import make_batch, tiny_dense_cfg
 from repro.common.pytree import flatten_with_paths
-from repro.core import (HiFTConfig, LiSAConfig, LRSchedule, MeZOConfig,
-                        STRATEGY_IDS, TrainState, make_runner)
+from repro.core import (HiFTConfig, LiSAConfig, LOMOConfig, LRSchedule,
+                        MeZOConfig, STRATEGY_IDS, TrainState, make_runner)
 from repro.train import checkpoint as ckpt
 
-STRATS = ["hift", "fpft", "mezo", "lisa"]
+STRATS = ["hift", "fpft", "mezo", "lisa", "lomo"]
 
 
 def _runner(strategy, cfg, seed=0, base_lr=3e-3, **kw):
@@ -24,13 +24,13 @@ def _runner(strategy, cfg, seed=0, base_lr=3e-3, **kw):
     return make_runner(cfg, strategy, seed=seed, **defaults)
 
 
-def test_registry_lists_all_four():
+def test_registry_lists_all_five():
     assert set(STRATS) <= set(STRATEGY_IDS)
 
 
 def test_registry_rejects_unknown():
     with pytest.raises(ValueError, match="unknown strategy"):
-        make_runner(tiny_dense_cfg(), "lomo")
+        make_runner(tiny_dense_cfg(), "galore")
 
 
 @pytest.mark.parametrize("strategy", STRATS)
@@ -141,6 +141,62 @@ def test_lisa_resamples_groups():
     r = _runner("lisa", cfg)
     seen = {r.strategy.group_index_at(s) for s in range(r.k * 20)}
     assert len(seen) > 1  # random sampling actually moves across groups
+
+
+def test_lomo_strategy_reduces_loss_without_grad_tree():
+    """The acceptance triple for the fifth registry entry: it trains, it
+    holds no optimizer state, and its own accounting says no full gradient
+    tree is ever resident."""
+    cfg = tiny_dense_cfg(ce_chunk=0)
+    r = _runner("lomo", cfg)
+    batch = make_batch(cfg, batch=4, seq=32)
+    losses = [float(r.train_step(batch)) for _ in range(30)]
+    assert np.isfinite(losses).all()
+    assert losses[-1] < losses[0] * 0.95, (losses[0], losses[-1])
+    assert r.state.opt_state == {}          # like MeZO: empty bundle
+    assert r.strategy.peak_grad_params(r.params) < r.total_params()
+    assert np.isfinite(float(r.last_metrics["grad_norm"]))
+
+
+def test_lomo_fused_step_is_sgd():
+    """LOMO == one plain SGD step (same grads, same global-norm clip) —
+    fusing the update into the backward must not change the math."""
+    from repro.optim import make_optimizer
+    cfg = tiny_dense_cfg(ce_chunk=0)
+    params = jax.tree.map(lambda x: x, _runner("fpft", cfg).params)
+    batch = make_batch(cfg, batch=2, seq=16)
+    lomo = make_runner(cfg, "lomo", params=params, schedule=LRSchedule(1e-2),
+                       lomo=LOMOConfig(grad_clip=1.0))
+    fpft = make_runner(cfg, "fpft", params=params,
+                       optimizer=make_optimizer("sgd", grad_clip=1.0),
+                       schedule=LRSchedule(1e-2))
+    for _ in range(3):
+        l1 = float(lomo.train_step(batch))
+        l2 = float(fpft.train_step(batch))
+        np.testing.assert_allclose(l1, l2, atol=2e-5)
+    for a, b in zip(jax.tree.leaves(lomo.params), jax.tree.leaves(fpft.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_lomo_generic_fallback_matches_fused():
+    """A custom loss_fn routes LOMO through the segment-vjp fallback; on the
+    dense family both paths must produce the same step."""
+    from repro.models import get_family
+    cfg = tiny_dense_cfg(ce_chunk=0)
+    fam = get_family(cfg)
+    params = fam.init(cfg, jax.random.PRNGKey(0))
+    batch = make_batch(cfg, batch=2, seq=16)
+    fused = make_runner(cfg, "lomo", params=params, schedule=LRSchedule(1e-2))
+    generic = make_runner(cfg, "lomo", params=params,
+                          schedule=LRSchedule(1e-2), loss_fn=fam.loss_fn)
+    assert fused.strategy._fused and not generic.strategy._fused
+    for _ in range(2):
+        np.testing.assert_allclose(float(fused.train_step(batch)),
+                                   float(generic.train_step(batch)),
+                                   atol=2e-5)
+    for a, b in zip(jax.tree.leaves(fused.params),
+                    jax.tree.leaves(generic.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
 
 
 def test_metrics_surface_is_uniform():

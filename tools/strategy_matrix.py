@@ -1,0 +1,104 @@
+"""Per-strategy test matrix from a pytest junit XML report.
+
+    python tools/strategy_matrix.py <junit.xml> [out.md]
+
+Buckets every test case by the registry strategy it exercises — the
+``[hift]``/``[lomo]``/... parametrization id when present, else a strategy
+name appearing in the test id (``test_lomo_fused_step_is_sgd`` -> lomo;
+``test_sharded_matches_unsharded_sgd`` -> the strategies named in it) —
+and prints a strategy x outcome table, so a registry regression in CI is
+attributable to the entry that broke rather than "the suite went red".
+Rows always cover every registered strategy; a strategy with zero
+attributed tests shows up as a hole in the matrix instead of silently
+disappearing.  Exit code is 1 when any attributed test failed.
+
+Written as a markdown table: CI appends it to $GITHUB_STEP_SUMMARY and
+uploads it (with the raw XML) as the job artifact.
+"""
+from __future__ import annotations
+
+import re
+import sys
+import xml.etree.ElementTree as ET
+from pathlib import Path
+
+# keep in sync with repro.core.registry's built-ins; importable fallback
+# below refreshes it when run with PYTHONPATH=src
+STRATEGIES = ["hift", "fpft", "mezo", "lisa", "lomo"]
+try:
+    from repro.core.registry import strategy_ids
+    STRATEGIES = strategy_ids()
+except Exception:
+    pass
+
+_PARAM = re.compile(r"\[([^\]]+)\]$")
+_WORD = re.compile(r"[a-z0-9]+")
+
+
+def strategies_of(testcase) -> list[str]:
+    """All strategies a junit <testcase> is attributable to."""
+    name = testcase.get("name", "")
+    classname = testcase.get("classname", "")
+    hits = []
+    m = _PARAM.search(name)
+    if m:
+        hits = [s for s in STRATEGIES
+                if s in {w for w in _WORD.findall(m.group(1).lower())}]
+    if not hits:
+        words = set(_WORD.findall(f"{classname} {name}".lower()))
+        hits = [s for s in STRATEGIES if s in words]
+    return hits
+
+
+def outcome_of(testcase) -> str:
+    for child in testcase:
+        tag = child.tag.lower()
+        if tag in ("failure", "error"):
+            return "fail"
+        if tag == "skipped":
+            return "skip"
+    return "pass"
+
+
+def build_matrix(junit_path: Path) -> tuple[dict, int]:
+    counts = {s: {"pass": 0, "fail": 0, "skip": 0} for s in STRATEGIES}
+    other = {"pass": 0, "fail": 0, "skip": 0}
+    n_failed_attributed = 0
+    for case in ET.parse(junit_path).getroot().iter("testcase"):
+        out = outcome_of(case)
+        hits = strategies_of(case)
+        if not hits:
+            other[out] += 1
+            continue
+        for s in hits:
+            counts[s][out] += 1
+        if out == "fail":
+            n_failed_attributed += 1
+    counts["(unattributed)"] = other
+    return counts, n_failed_attributed
+
+
+def render(counts: dict) -> str:
+    lines = ["| strategy | pass | fail | skip |",
+             "|---|---:|---:|---:|"]
+    for s, c in counts.items():
+        mark = " ❌" if c["fail"] else ""
+        lines.append(f"| `{s}`{mark} | {c['pass']} | {c['fail']} | {c['skip']} |")
+    return "\n".join(lines) + "\n"
+
+
+def main(argv: list[str]) -> int:
+    if not argv:
+        print(__doc__, file=sys.stderr)
+        return 2
+    junit = Path(argv[0])
+    counts, n_failed = build_matrix(junit)
+    table = render(counts)
+    if len(argv) > 1:
+        Path(argv[1]).write_text("## Per-strategy test matrix\n\n" + table)
+    print(table, end="")
+    return 1 if n_failed else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
