@@ -1,8 +1,24 @@
-"""Paper Table 5 analogue: wall-clock step time HiFT vs FPFT per optimizer,
+"""Paper Table 5 analogue: wall-clock step time per strategy/optimizer,
 measured on CPU with a small model (relative ordering is the claim: HiFT's
 per-step compute shrinks because backward is cut below the active group).
 All runners come from the unified strategy registry; a MeZO row shows the
 gradient-free step cost (two forwards, no backward) for scale.
+
+Beyond the serial rows, the table sweeps the two hot-loop knobs this repo
+adds on top of the paper (see docs/performance.md):
+
+  - pipelined: HiFT with the double-buffered bundle prefetcher
+    (``--pipeline-depth 2`` / strategy ``hift_pipelined``) — on CPU the
+    host<->device transfers are no-ops, so this row mostly proves the
+    scheduler adds no overhead; on accelerators it is where the win is;
+  - fused: the optimizer update routed through the packed Pallas kernels
+    (``--fused-update``) — one launch per dtype bucket instead of one
+    elementwise chain per leaf.
+
+Alongside the printed table the same numbers are emitted machine-readable
+to ``BENCH_speed.json`` (override with ``--out``), one row per
+(strategy, optimizer, pipelined, fused, mesh) cell — the bench trajectory
+file CI uploads as an artifact.
 
 When more than one device is visible, sharded rows run the same HiFT/FPFT
 steps mesh-compiled over (data, model) and report the speedup vs their own
@@ -16,14 +32,20 @@ On host CPUs the sharded rows mostly measure collective overhead; on real
 accelerators the same code path is where the scaling comes from."""
 from __future__ import annotations
 
+import argparse
+import json
 import time
+from pathlib import Path
 
 import jax
 
 from repro.configs.base import ArchConfig
 from repro.core import HiFTConfig, LRSchedule, make_runner
+from repro.core.registry import FUSED_OPTIMIZERS
 from repro.launch.mesh import mesh_from_spec
 from repro.models import transformer as T
+
+DEFAULT_OUT = Path(__file__).resolve().parents[1] / "BENCH_speed.json"
 
 
 def _cfg():
@@ -38,16 +60,48 @@ def _batch(cfg, b=8, s=256):
     return {"tokens": t, "labels": t}
 
 
-def _time_steps(runner, batch, n=10, warmup=None):
+def _time_steps(runner, batch, n=10, warmup=None, reps=3):
+    """Best-of-``reps`` mean step time: warm every per-group jitted step
+    first, then time ``n`` steps blocking on each loss (async dispatch would
+    otherwise fake sub-ms steps), and keep the fastest rep to shed scheduler
+    noise."""
     warm = warmup if warmup is not None else getattr(runner, "k", 1)
     for _ in range(warm):          # compile every per-group step
         loss = runner.train_step(batch)
     jax.block_until_ready(loss)    # drain warmup before the timer starts
-    t0 = time.time()
-    for _ in range(n):
-        # block on the loss so async dispatch doesn't fake sub-ms steps
-        jax.block_until_ready(runner.train_step(batch))
-    return (time.time() - t0) / n
+    best = float("inf")
+    for _ in range(max(reps, 1)):
+        t0 = time.time()
+        for _ in range(n):
+            jax.block_until_ready(runner.train_step(batch))
+        best = min(best, (time.time() - t0) / n)
+    return best
+
+
+def _duel(runner_a, runner_b, batch, n=10, reps=6):
+    """Interleaved A/B timing: alternate timed bursts of the two runners —
+    REVERSING the order every rep, since whichever side times second in a
+    burst pair measures ~1% slower on a noisy host — and keep each side's
+    best rep.  This is how the headline claims are measured; sequential row
+    timings minutes apart cannot support a percent-level comparison."""
+    for r in (runner_a, runner_b):
+        for _ in range(getattr(r, "k", 1)):
+            loss = r.train_step(batch)
+        jax.block_until_ready(loss)
+    ta = tb = float("inf")
+    for rep in range(max(reps, 2)):
+        pair = (runner_a, runner_b) if rep % 2 == 0 \
+            else (runner_b, runner_a)
+        for r in pair:
+            t0 = time.time()
+            for _ in range(n):
+                jax.block_until_ready(r.train_step(batch))
+            t = (time.time() - t0) / n
+            if r is runner_a:
+                ta = min(ta, t)
+            else:
+                tb = min(tb, t)
+    return ta, tb
 
 
 def _bench_mesh():
@@ -59,49 +113,114 @@ def _bench_mesh():
     return mesh_from_spec(f"2x{n // 2}" if n >= 4 else "2x1")
 
 
-def run(csv=True):
+def run(csv=True, quick=False, out=None, reps=3):
+    """``out=None`` (the default for library callers like benchmarks/run.py)
+    prints the table only; pass a path — the CLI passes ``DEFAULT_OUT`` — to
+    also emit the machine-readable JSON and run the headline duel."""
     cfg = _cfg()
     params = T.init(cfg, jax.random.PRNGKey(0))
     batch = _batch(cfg)
-    rows = []
     sched = LRSchedule(1e-4)
-    mesh = _bench_mesh()
-    for opt in ["adamw", "sgd"]:
-        f = make_runner(cfg, "fpft", params=params, optimizer=opt,
-                        schedule=sched)
-        tf = _time_steps(f, batch, warmup=2)
-        h = make_runner(cfg, "hift", params=params, optimizer=opt,
-                        hift=HiFTConfig(m=1), schedule=sched)
-        th = _time_steps(h, batch, n=h.k)
-        rows.append((opt, tf, th))
+    mesh = None if quick else _bench_mesh()
+    rows = []
+
+    def bench(strategy, optimizer, *, pipelined=False, fused=False,
+              mesh_row=None, n=10, warmup=None, **kw):
+        r = make_runner(cfg, strategy, params=params, optimizer=optimizer,
+                        schedule=sched, fused_update=fused,
+                        mesh=mesh_row, **kw)
+        t = _time_steps(r, batch, n=n, warmup=warmup, reps=reps)
+        shape = "x".join(str(s) for s in mesh_row.devices.shape) \
+            if mesh_row is not None else None
+        row = {"strategy": strategy, "optimizer": optimizer,
+               "pipelined": pipelined, "fused": fused, "mesh": shape,
+               "step_ms": round(t * 1e3, 3),
+               "steps_per_s": round(1 / t, 2)}
+        rows.append(row)
         if csv:
-            print(f"speed_table/fpft/{opt},{tf*1e6:.0f},steps_per_s={1/tf:.2f}")
-            print(f"speed_table/hift/{opt},{th*1e6:.0f},steps_per_s={1/th:.2f};"
-                  f"speedup_vs_fpft={tf/th:.2f}x")
+            tags = "".join([".pipelined" if pipelined else "",
+                            ".fused" if fused else "",
+                            f"-sharded@{shape}" if shape else ""])
+            print(f"speed_table/{strategy}{tags}/{optimizer},{t*1e6:.0f},"
+                  f"steps_per_s={1/t:.2f}")
+        return t
+
+    opts = ["adamw"] if quick else ["adamw", "sgd"]
+    for opt in opts:
+        tf = bench("fpft", opt, warmup=2)
+        th = bench("hift", opt, hift=HiFTConfig(m=1))
+        if csv:
+            print(f"speed_table/#hift-vs-fpft/{opt},speedup={tf/th:.2f}x")
+        # the two hot-loop knobs, separately and together
+        tp = bench("hift", opt, pipelined=True, pipeline_depth=2,
+                   hift=HiFTConfig(m=1))
+        if csv:
+            print(f"speed_table/#pipelined-vs-serial/{opt},"
+                  f"speedup={th/tp:.2f}x")
+        if opt in FUSED_OPTIMIZERS:
+            bench("hift", opt, fused=True, hift=HiFTConfig(m=1))
+            tpf = bench("hift", opt, pipelined=True, fused=True,
+                        pipeline_depth=2, hift=HiFTConfig(m=1))
+            if csv:
+                print(f"speed_table/#pipelined+fused-vs-serial+unfused/{opt},"
+                      f"speedup={th/tpf:.2f}x")
         if mesh is None or opt != "adamw":
             continue
-        # sharded rows: same steps, mesh-compiled (ISSUE: multi-device row)
-        shape = "x".join(str(s) for s in mesh.devices.shape)
-        fs = make_runner(cfg, "fpft", params=params, optimizer=opt,
-                         schedule=sched, mesh=mesh)
-        tfs = _time_steps(fs, batch, warmup=2)
-        hs = make_runner(cfg, "hift", params=params, optimizer=opt,
-                         hift=HiFTConfig(m=1), schedule=sched, mesh=mesh)
-        ths = _time_steps(hs, batch, n=hs.k)
-        rows.append((f"{opt}@{shape}", tfs, ths))
+        # sharded rows: same steps, mesh-compiled
+        tfs = bench("fpft", opt, mesh_row=mesh, warmup=2)
+        ths = bench("hift", opt, mesh_row=mesh, hift=HiFTConfig(m=1))
         if csv:
-            print(f"speed_table/fpft-sharded@{shape}/{opt},{tfs*1e6:.0f},"
-                  f"steps_per_s={1/tfs:.2f};speedup_vs_1dev={tf/tfs:.2f}x")
-            print(f"speed_table/hift-sharded@{shape}/{opt},{ths*1e6:.0f},"
-                  f"steps_per_s={1/ths:.2f};speedup_vs_1dev={th/ths:.2f}x")
-    mz = make_runner(cfg, "mezo", params=params, schedule=sched)
-    tm = _time_steps(mz, batch, warmup=2)
-    rows.append(("mezo", tm, tm))
-    if csv:
-        print(f"speed_table/mezo/-,{tm*1e6:.0f},steps_per_s={1/tm:.2f}")
+            shape = "x".join(str(s) for s in mesh.devices.shape)
+            print(f"speed_table/#sharded@{shape}-vs-1dev/{opt},"
+                  f"fpft={tf/tfs:.2f}x;hift={th/ths:.2f}x")
+    if not quick:
+        bench("mezo", "adamw", warmup=2)
+
+    if out:
+        doc = {
+            "bench": "speed_table",
+            "model": {"name": cfg.name, "n_layers": cfg.n_layers,
+                      "d_model": cfg.d_model, "d_ff": cfg.d_ff,
+                      "vocab": cfg.vocab},
+            "batch": {"batch": 8, "seq": 256},
+            "backend": jax.default_backend(),
+            "devices": len(jax.devices()),
+            "reps": reps,
+            "rows": rows,
+        }
+        # headline claim, measured as an interleaved duel (see _duel): the
+        # optimized hot loop (bundle pipeline + fused update) vs the seed
+        # serial+unfused hot loop
+        serial = make_runner(cfg, "hift", params=params, optimizer="adamw",
+                             schedule=sched, fused_update=False,
+                             hift=HiFTConfig(m=1))
+        piped = make_runner(cfg, "hift", params=params, optimizer="adamw",
+                            schedule=sched, fused_update=True,
+                            pipeline_depth=2, hift=HiFTConfig(m=1))
+        t_serial, t_piped = _duel(serial, piped, batch, reps=max(reps, 4))
+        doc["claims"] = {
+            "measurement": "interleaved duel, best-of-reps mean step time",
+            "hift_adamw_serial_unfused_ms": round(t_serial * 1e3, 3),
+            "hift_adamw_pipelined_fused_ms": round(t_piped * 1e3, 3),
+            "pipelined_fused_le_serial_unfused": t_piped <= t_serial,
+        }
+        if csv:
+            print(f"speed_table/#duel-pipelined+fused-vs-serial+unfused/"
+                  f"adamw,speedup={t_serial/t_piped:.3f}x")
+        Path(out).write_text(json.dumps(doc, indent=1) + "\n")
+        if csv:
+            print(f"speed_table/#json -> {out}")
     return rows
 
 
 if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="adamw-only, no mesh/mezo rows (CI smoke)")
+    ap.add_argument("--reps", type=int, default=3,
+                    help="timing repetitions; best-of is reported")
+    ap.add_argument("--out", default=str(DEFAULT_OUT),
+                    help="BENCH_speed.json path ('' disables)")
+    args = ap.parse_args()
     print("name,us_per_call,derived")
-    run()
+    run(quick=args.quick, out=args.out or None, reps=args.reps)

@@ -1,10 +1,12 @@
 """HiFT core: the paper's contribution + the unified Strategy API."""
 from repro.core.grouping import Group, make_groups, order_groups, split_params, merge_params, group_cut
 from repro.core.scheduler import LRSchedule
+from repro.core.pipeline import BundlePipeline, PipelineStats
 from repro.core.strategy import (TrainState, Strategy, Runner,
                                  HiFTConfig, LiSAConfig, MeZOConfig,
                                  LOMOConfig, HiFTStrategy, FPFTStrategy,
                                  LiSAStrategy, MeZOStrategy, LOMOStrategy,
+                                 PipelinedHiFTStrategy,
                                  build_fpft_step, fpft_step_body,
                                  lomo_step_body, write_back,
                                  host_put, device_put_async)

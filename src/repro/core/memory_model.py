@@ -97,12 +97,18 @@ class _Accountant:
 def analyze(shapes: PyTree, units: Sequence[Unit], *, optimizer: str = "adamw",
             precision: str = "fp32", mode: str = "hift", m: int = 1) -> MemoryReport:
     """shapes: params tree or jax.eval_shape(init) tree.
-    precision: fp32 | mixed | mixed_hi.  mode: fpft | hift | mezo | lomo.
+    precision: fp32 | mixed | mixed_hi.
+    mode: fpft | hift | hift_pipelined | mezo | lomo.
 
     Per-mode accounting (matching the registry strategies' own
     ``peak_trainable_params`` / ``peak_grad_params``):
       - fpft: everything trainable, full grad tree, full optimizer state.
       - hift: one group of m units trainable; grads + state for it only.
+      - hift_pipelined: as hift, but the double-buffered bundle pipeline
+        (``core.pipeline``) keeps up to TWO optimizer bundles device-resident
+        (the active group's + one prefetched/draining), so optimizer state —
+        and the fp32 masters riding in the bundles under Mixed^Hi — doubles;
+        gradients stay one group (only the active group has a backward).
       - mezo: everything trainable but NO gradients and NO optimizer state
         (two forward passes — memory ~= inference).
       - lomo: everything trainable, no optimizer state, and gradient
@@ -112,10 +118,11 @@ def analyze(shapes: PyTree, units: Sequence[Unit], *, optimizer: str = "adamw",
     acc = _Accountant(shapes, units)
     n = acc.total()
     groups = make_groups(acc.units, m)
+    hift_modes = ("hift", "hift_pipelined")
 
     if mode == "fpft":
         peak, gsize = n, n
-    elif mode == "hift":
+    elif mode in hift_modes:
         peak = max(acc.group_params(g) for g in groups)
         gsize = peak
     elif mode == "mezo":
@@ -125,10 +132,14 @@ def analyze(shapes: PyTree, units: Sequence[Unit], *, optimizer: str = "adamw",
         gsize = max(acc.group_params(g) for g in make_groups(acc.units, 1))
     else:
         raise ValueError(mode)
-    # fp32 master copies under Mixed^Hi track gradient residency: whatever
-    # is being updated at one instant (hift: the active group; lomo: one
-    # fused unit; mezo: nothing is grad-updated)
-    master = gsize if mode in ("mezo", "lomo") else peak
+    # device-resident optimizer bundles: the pipelined schedule holds the
+    # active group's plus one in flight (never more — the in-flight budget
+    # blocks before a third could land); serial holds exactly one
+    resident_bundles = min(2, len(groups)) if mode == "hift_pipelined" else 1
+    # fp32 master copies under Mixed^Hi ride in the bundles: whatever is
+    # being updated at one instant (hift: the active group; lomo: one fused
+    # unit; mezo: nothing is grad-updated) x resident bundles
+    master = gsize if mode in ("mezo", "lomo") else peak * resident_bundles
 
     # --- weights resident (#Para) ---
     if precision == "fp32":
@@ -151,10 +162,11 @@ def analyze(shapes: PyTree, units: Sequence[Unit], *, optimizer: str = "adamw",
                           tuple((key, 0, ln) for key, ln in acc.stack_len.items()))
             state = acc.group_adafactor_bytes(whole)
         else:
-            state = max(acc.group_adafactor_bytes(g) for g in groups)
+            state = max(acc.group_adafactor_bytes(g)
+                        for g in groups) * resident_bundles
     else:
-        state = int(_STATE_MULT[optimizer] * 4 * peak) if mode == "hift" \
-            else int(_STATE_MULT[optimizer] * 4 * n)
+        state = int(_STATE_MULT[optimizer] * 4 * peak * resident_bundles) \
+            if mode in hift_modes else int(_STATE_MULT[optimizer] * 4 * n)
 
     return MemoryReport(
         n_params=n, peak_trainable=peak,

@@ -1,0 +1,262 @@
+"""Double-buffered optimizer-bundle pipeline for grouped strategies.
+
+HiFT's per-step memory saving keeps inactive optimizer bundles on host
+(the paper's MoveOptimizerState2CPU / MoveOptimizerState2GPU); the serial
+hot loop pays for that on the critical path — the bundle upload happens
+right before the jitted step and the offload right after.  But HiFT's
+sweep order (``TrainState.extra["order"]``) makes the NEXT group knowable
+one step ahead, and LiSA's sampled schedule is a pure function of
+``(seed, step)``, so both can stream optimizer bytes overlapped with
+compute (ChunkFT-style):
+
+  - :meth:`BundlePipeline.prefetch` starts the host->device upload of
+    group ``g+1``'s bundle right after group ``g``'s step is DISPATCHED,
+    so the transfer runs while ``g`` computes;
+  - :meth:`BundlePipeline.fetch` hands that device copy to group
+    ``g+1``'s step (falling back to a fresh upload on a cache miss — a
+    restored checkpoint, a forked state, a re-sampled LiSA group);
+  - :meth:`BundlePipeline.offload` dispatches ``g``'s device->host copy
+    but defers BLOCKING on it, so the drain overlaps step ``g+1``.
+
+A bounded in-flight budget keeps at most ``depth`` bundles device-resident
+(default 2: the active group's plus one prefetched-or-draining), so the
+paper's k-fold optimizer-state claim degrades to exactly 2/k, never more —
+``repro.core.memory_model`` accounts this as mode ``"hift_pipelined"`` and
+the strategy conformance battery cross-checks it.
+
+Donation-safe handshake with the sharded path: the prefetched device tree
+is placed with the SAME ``dist.shardings.bundle_shardings`` spec the jitted
+step was compiled with (``group_step_shardings`` arg 2), so the step's
+in-step ``device_put`` is a no-op and the step may donate the buffer; the
+pipeline pops its reference in :meth:`fetch` before the step consumes it,
+leaving the donated buffer unaliased.
+
+Correctness invariant (test-enforced, ``tests/test_pipeline.py``): every
+value still round-trips host<->device unchanged, so a pipelined run is
+bit-identical to the serial schedule — the pipeline only moves WHEN the
+transfers happen, never what they carry.
+
+The host/device placement primitives (:func:`host_put`,
+:func:`device_put_async`) live here too; ``repro.core.strategy`` re-exports
+them for compatibility.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from collections import deque
+from typing import Any, Optional
+
+import jax
+
+PyTree = Any
+
+
+# --------------------------------------------------------------- placement
+
+_HOST_PUT_UNAVAILABLE = False
+
+
+def _leaf_placements(tree: PyTree, memory_kind: str) -> PyTree:
+    """Per-leaf sharding tree targeting ``memory_kind`` but PRESERVING each
+    leaf's current device placement.  This is what keeps unsharded
+    multi-device runs from funnelling every transfer through device 0: a
+    leaf living on device 3 offloads to (and re-uploads from) device 3's
+    pinned host memory, not ``jax.devices()[0]``'s.  Leaves without a
+    sharding (numpy arrays fresh from a checkpoint) fall back to the
+    default device."""
+    fallback = jax.sharding.SingleDeviceSharding(jax.devices()[0],
+                                                 memory_kind=memory_kind)
+
+    def one(leaf):
+        sharding = getattr(leaf, "sharding", None)
+        if sharding is None:
+            return fallback
+        return sharding.with_memory_kind(memory_kind)
+
+    return jax.tree.map(one, tree)
+
+
+def host_put(tree: PyTree, shardings: PyTree = None) -> PyTree:
+    """Move a pytree to host memory (the paper's MoveOptimizerState2CPU).
+
+    On TPU this uses the pinned_host memory kind so the transfer back is an
+    async DMA; on the CPU backend arrays are already host-resident.  When a
+    ``shardings`` tree is given (mesh-sharded bundles), each leaf keeps its
+    partitioning and only the memory kind changes, so a sharded optimizer
+    bundle offloads without gathering.  Without one, the placement is
+    derived per leaf from the tree's CURRENT sharding (memory kind flipped
+    to pinned_host) — see :func:`_leaf_placements`.
+
+    Backends without pinned_host support raise on the placement — only those
+    expected memory-kind errors are caught, and the FIRST one warns that the
+    state stays device-resident (the paper's offload memory saving does not
+    apply then).  Anything else propagates: silently keeping multi-GB
+    optimizer state on device would defeat the offload claim unnoticed."""
+    global _HOST_PUT_UNAVAILABLE
+    dev = jax.devices()[0]
+    if dev.platform == "cpu" or _HOST_PUT_UNAVAILABLE:
+        return tree
+    try:
+        if shardings is not None:
+            host = jax.tree.map(lambda s: s.with_memory_kind("pinned_host"),
+                                shardings)
+        else:
+            host = _leaf_placements(tree, "pinned_host")
+        return jax.device_put(tree, host)
+    except (ValueError, NotImplementedError, RuntimeError) as e:
+        # the memory-kind errors backends actually raise: ValueError /
+        # XlaRuntimeError (a RuntimeError) for an unknown or unsupported
+        # memory kind, NotImplementedError from older plugin backends
+        _HOST_PUT_UNAVAILABLE = True
+        warnings.warn(
+            f"pinned_host offload unavailable on {dev.platform!r} ({e}); "
+            "optimizer state stays device-resident — the paper's offload "
+            "memory saving does not apply on this backend",
+            RuntimeWarning, stacklevel=2)
+        return tree
+
+
+def device_put_async(tree: PyTree, shardings: PyTree = None) -> PyTree:
+    """MoveOptimizerState2GPU analogue — dispatches async, overlaps compute.
+
+    With a ``shardings`` tree the transfer restores the mesh placement
+    (device memory kind).  Without one, each leaf returns to its OWN
+    device's default memory (sharding preserved, memory kind flipped back
+    to "device") rather than funnelling through device 0."""
+    if jax.devices()[0].platform == "cpu":
+        return tree
+    if shardings is None:
+        shardings = _leaf_placements(tree, "device")
+    return jax.device_put(tree, shardings)
+
+
+# ---------------------------------------------------------------- pipeline
+
+@dataclasses.dataclass
+class PipelineStats:
+    """Observability counters (reset with the pipeline, never checkpointed).
+
+    ``max_resident`` counts device-resident bundles at their peak — the
+    active step's bundle plus everything prefetched or draining — and is
+    what the in-flight budget bounds (<= depth)."""
+    prefetch_hits: int = 0
+    prefetch_misses: int = 0
+    prefetches: int = 0
+    offloads: int = 0
+    budget_waits: int = 0
+    max_resident: int = 0
+
+
+class BundlePipeline:
+    """Double-buffered host<->device scheduler for per-group optimizer
+    bundles.  One instance per grouped strategy; it holds only REDUNDANT
+    device copies of host-resident state (a transfer cache), so it is
+    invisible to the Strategy purity contract: losing it (fresh process,
+    checkpoint restore) costs a prefetch miss, never correctness.
+
+    Cache-coherence rule: a prefetched entry is keyed by group AND by the
+    identity of the host tree it was uploaded from.  :meth:`fetch` only
+    serves an entry whose source IS the bundle the caller holds — a state
+    restored from checkpoint, a forked ``TrainState``, or a LiSA re-sample
+    therefore falls back to a plain upload instead of reading a stale
+    device copy."""
+
+    def __init__(self, depth: int = 2):
+        if depth < 2:
+            raise ValueError(f"pipeline depth must be >= 2, got {depth}; "
+                             "use the serial path for depth 1")
+        self.depth = depth
+        # group key -> (source host tree, device copy)
+        self._prefetched: dict[str, tuple[PyTree, PyTree]] = {}
+        # host copies of deferred offloads, oldest first; an entry leaves
+        # the deque when we BLOCK on it (D2H done => device buffer free)
+        self._draining: deque[PyTree] = deque()
+        self.stats = PipelineStats()
+
+    # ------------------------------------------------------------- budget
+
+    def device_resident(self, active: int = 1) -> int:
+        """Device-resident bundle count: the active step's (``active``) plus
+        prefetched copies plus offloads still draining."""
+        return active + len(self._prefetched) + len(self._draining)
+
+    def _note_resident(self) -> None:
+        self.stats.max_resident = max(self.stats.max_resident,
+                                      self.device_resident())
+
+    def _make_room(self, active: int) -> None:
+        """Make room for one incoming device bundle: first block on the
+        oldest draining offload(s) — on real hardware the drain was
+        dispatched a full step ago and overlaps compute, so this wait is
+        usually zero — then, if still over budget (stale cache entries from
+        forked/restored states), evict prefetched copies oldest-first.
+        Evicting only ever costs a future re-upload, never correctness."""
+        def over():
+            return (active + len(self._prefetched) + len(self._draining)
+                    + 1 > self.depth)
+        while over() and self._draining:
+            self.stats.budget_waits += 1
+            jax.block_until_ready(self._draining.popleft())
+        while over() and self._prefetched:
+            self._prefetched.pop(next(iter(self._prefetched)))
+
+    # ------------------------------------------------------------ actions
+
+    def fetch(self, key: str, bundle: PyTree,
+              shardings: PyTree = None) -> PyTree:
+        """Device copy of ``bundle`` for the ACTIVE step.  Serves the
+        prefetched copy when its source matches, else uploads now (the
+        serial path's behavior).  The entry is popped — after this call the
+        pipeline holds no reference, so the jitted step may donate it."""
+        entry = self._prefetched.pop(key, None)
+        if entry is not None and entry[0] is bundle:
+            self.stats.prefetch_hits += 1
+            return entry[1]
+        self.stats.prefetch_misses += 1
+        self._make_room(active=0)   # the upload becomes the active bundle
+        self._note_resident()
+        return device_put_async(bundle, shardings)
+
+    def prefetch(self, key: str, bundle: PyTree,
+                 shardings: PyTree = None) -> None:
+        """Start the async upload of the NEXT group's bundle.  Call right
+        after dispatching the current step so the H2D transfer overlaps its
+        compute.  Respects the in-flight budget first (see
+        :meth:`_make_room`); replacing an existing entry for ``key`` frees
+        the old copy."""
+        self._prefetched.pop(key, None)
+        self._make_room(active=1)
+        self._prefetched[key] = (bundle, device_put_async(bundle, shardings))
+        self.stats.prefetches += 1
+        self._note_resident()
+
+    def offload(self, key: str, new_bundle: PyTree,
+                shardings: PyTree = None) -> PyTree:
+        """Deferred host offload of a step's output bundle: the D2H copy is
+        DISPATCHED now (it runs once the step finishes, overlapping the next
+        step) but this call does not block on it — the device buffer is
+        accounted as draining until the budget reclaims it.  Before
+        enqueueing, older drains are blocked down to ``depth - 2`` entries so
+        the NEXT step's device bundle (prefetched or freshly initialized)
+        still fits the budget.  Returns the host tree to store in
+        ``TrainState.opt_state``."""
+        while len(self._draining) > max(self.depth - 2, 0):
+            self.stats.budget_waits += 1
+            jax.block_until_ready(self._draining.popleft())
+        host = host_put(new_bundle, shardings)
+        self._draining.append(host)
+        self.stats.offloads += 1
+        # the draining buffer IS the step's donated active buffer, so at
+        # this instant nothing else counts as "active" (active=0)
+        self.stats.max_resident = max(self.stats.max_resident,
+                                      self.device_resident(active=0))
+        return host
+
+    def flush(self) -> None:
+        """Block until every deferred offload has drained and drop all
+        prefetched copies (e.g. before a deliberate synchronization point).
+        State values are unaffected — this only empties the cache."""
+        while self._draining:
+            jax.block_until_ready(self._draining.popleft())
+        self._prefetched.clear()

@@ -53,9 +53,15 @@ def make_strategy(name: str, cfg, optimizer, **kwargs):
     return get_strategy_cls(name)(cfg, optimizer, **kwargs)
 
 
+# optimizers with a fused Pallas update kernel (the paper's three headline
+# optimizers — see docs/performance.md for the coverage matrix)
+FUSED_OPTIMIZERS = ("adamw", "sgdm", "adagrad")
+
+
 def make_runner(cfg, strategy: str = "hift", *, params: Any = None,
                 optimizer: Any = "adamw", rng: Any = None, seed: int = 0,
-                mesh: Any = None, **kwargs):
+                mesh: Any = None, fused_update: Any = None,
+                pipeline_depth: Any = None, **kwargs):
     """One factory for every fine-tuning strategy.
 
     ``optimizer`` may be a name (resolved via ``repro.optim.make_optimizer``)
@@ -64,18 +70,67 @@ def make_runner(cfg, strategy: str = "hift", *, params: Any = None,
     ``repro.launch.mesh.mesh_from_spec("2x4")``) makes the strategy's jitted
     steps mesh-aware: params/optimizer state shard over the ``model`` axis
     and batches over ``data`` per ``repro.dist.shardings`` (see
-    ``docs/sharding.md``).  Remaining kwargs go to the strategy constructor
-    (``schedule``, ``policy``, ``loss_fn``, ``param_sharding_fn``, and
-    per-strategy configs such as ``hift=``, ``lisa=``, ``mezo=``).
+    ``docs/sharding.md``).
+
+    Hot-loop knobs (see ``docs/performance.md``):
+
+    - ``fused_update``: route the optimizer's elementwise update through the
+      fused Pallas kernels (one VMEM pass over param+moments).  ``None``
+      (default) auto-selects: fused on TPU for the GROUPED strategies
+      (whose group-sized trees the packed layout was sized for), unfused
+      elsewhere — the packing concatenates each dtype bucket into one
+      contiguous stream, so full-tree strategies like fpft pay transient
+      full-tree copies and must opt in explicitly.  Requires ``optimizer``
+      given by NAME (one of ``FUSED_OPTIMIZERS``) so the factory can
+      rebuild it.
+    - ``pipeline_depth``: >= 2 double-buffers the grouped strategies'
+      host<->device bundle transfers (``repro.core.pipeline``); applies to
+      ``hift``/``hift_pipelined``/``lisa`` and overrides the matching field
+      of an explicit ``hift=``/``lisa=`` config.
+
+    Remaining kwargs go to the strategy constructor (``schedule``,
+    ``policy``, ``loss_fn``, ``param_sharding_fn``, and per-strategy configs
+    such as ``hift=``, ``lisa=``, ``mezo=``).
     """
+    import dataclasses
+
     import jax
 
-    from repro.core.strategy import Runner
+    from repro.core.strategy import HiFTConfig, LiSAConfig, Runner
     from repro.models import get_family
     from repro.optim import make_optimizer
 
+    grouped = strategy in ("hift", "hift_pipelined", "lisa")
     if isinstance(optimizer, str):
-        optimizer = make_optimizer(optimizer)
+        fused = (jax.default_backend() == "tpu" and grouped) \
+            if fused_update is None else bool(fused_update)
+        okw = {"use_pallas_fused": True} if (fused and
+                                             optimizer in FUSED_OPTIMIZERS) \
+            else {}
+        if fused_update and not okw:
+            raise ValueError(f"no fused update kernel for {optimizer!r}; "
+                             f"have {FUSED_OPTIMIZERS}")
+        optimizer = make_optimizer(optimizer, **okw)
+    elif fused_update:
+        raise ValueError("fused_update=True needs the optimizer given by "
+                         "name so make_runner can rebuild it fused")
+    if pipeline_depth is not None:
+        if strategy == "hift_pipelined" and pipeline_depth < 2:
+            raise ValueError(
+                "hift_pipelined IS the pipelined schedule; an explicit "
+                f"pipeline_depth={pipeline_depth} would silently re-enable "
+                "it — use strategy 'hift' for the serial path")
+        if strategy in ("hift", "hift_pipelined"):
+            kwargs["hift"] = dataclasses.replace(
+                kwargs.get("hift") or HiFTConfig(),
+                pipeline_depth=pipeline_depth)
+        elif strategy == "lisa":
+            kwargs["lisa"] = dataclasses.replace(
+                kwargs.get("lisa") or LiSAConfig(),
+                pipeline_depth=pipeline_depth)
+        else:
+            raise ValueError("pipeline_depth applies to the grouped "
+                             f"strategies (hift/lisa), not {strategy!r}")
     if params is None:
         params = get_family(cfg).init(cfg, jax.random.PRNGKey(seed))
     if rng is None:

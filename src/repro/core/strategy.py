@@ -33,6 +33,11 @@ Built-in strategies (registered in ``repro.core.registry``):
                pass, consuming each layer's gradient in cotangent order, so
                a full gradient tree never materializes; like MeZO the
                optimizer bundle is empty.
+  - ``hift_pipelined`` : HiFT with the double-buffered bundle pipeline
+               (``repro.core.pipeline``) on by default — next group's
+               optimizer bundle uploads while the current step computes;
+               bit-identical to ``hift``, at most 2 bundles device-resident
+               (see ``docs/performance.md``).
 
 Every strategy is also **mesh-aware**: pass ``mesh=`` (a
 ``jax.sharding.Mesh`` with ``data``/``model`` axes, e.g. from
@@ -50,7 +55,6 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
-import warnings
 from typing import Any, Callable, Optional
 
 import jax
@@ -62,6 +66,7 @@ from repro.dist import ctx as dist_ctx
 from repro.dist import shardings as dist_shardings
 from repro.core.grouping import (Group, group_cut, make_groups, merge_params,
                                  order_groups, split_params)
+from repro.core.pipeline import BundlePipeline, device_put_async, host_put
 from repro.core.registry import register_strategy
 from repro.core.scheduler import LRSchedule
 from repro.models import get_family, unit_first_depth
@@ -75,59 +80,10 @@ Metrics = dict
 
 
 # --------------------------------------------------------------- placement
-
-_HOST_PUT_UNAVAILABLE = False
-
-
-def host_put(tree: PyTree, shardings: PyTree = None) -> PyTree:
-    """Move a pytree to host memory (the paper's MoveOptimizerState2CPU).
-
-    On TPU this uses the pinned_host memory kind so the transfer back is an
-    async DMA; on the CPU backend arrays are already host-resident.  When a
-    ``shardings`` tree is given (mesh-sharded bundles), each leaf keeps its
-    partitioning and only the memory kind changes, so a sharded optimizer
-    bundle offloads without gathering.
-
-    Backends without pinned_host support raise on the placement — only those
-    expected memory-kind errors are caught, and the FIRST one warns that the
-    state stays device-resident (the paper's offload memory saving does not
-    apply then).  Anything else propagates: silently keeping multi-GB
-    optimizer state on device would defeat the offload claim unnoticed."""
-    global _HOST_PUT_UNAVAILABLE
-    dev = jax.devices()[0]
-    if dev.platform == "cpu" or _HOST_PUT_UNAVAILABLE:
-        return tree
-    try:
-        if shardings is not None:
-            host = jax.tree.map(lambda s: s.with_memory_kind("pinned_host"),
-                                shardings)
-            return jax.device_put(tree, host)
-        sharding = jax.sharding.SingleDeviceSharding(dev, memory_kind="pinned_host")
-        return jax.device_put(tree, sharding)
-    except (ValueError, NotImplementedError, RuntimeError) as e:
-        # the memory-kind errors backends actually raise: ValueError /
-        # XlaRuntimeError (a RuntimeError) for an unknown or unsupported
-        # memory kind, NotImplementedError from older plugin backends
-        _HOST_PUT_UNAVAILABLE = True
-        warnings.warn(
-            f"pinned_host offload unavailable on {dev.platform!r} ({e}); "
-            "optimizer state stays device-resident — the paper's offload "
-            "memory saving does not apply on this backend",
-            RuntimeWarning, stacklevel=2)
-        return tree
-
-
-def device_put_async(tree: PyTree, shardings: PyTree = None) -> PyTree:
-    """MoveOptimizerState2GPU analogue — dispatches async, overlaps forward.
-
-    With a ``shardings`` tree the transfer restores the mesh placement
-    (device memory kind) rather than funnelling through device 0."""
-    dev = jax.devices()[0]
-    if dev.platform == "cpu":
-        return tree
-    if shardings is not None:
-        return jax.device_put(tree, shardings)
-    return jax.device_put(tree, jax.sharding.SingleDeviceSharding(dev))
+#
+# host_put / device_put_async live in repro.core.pipeline (with the
+# double-buffered BundlePipeline that schedules them off the critical
+# path); re-exported here because this module is their historical home.
 
 
 def write_back(params: PyTree, new_active: PyTree, group: Group) -> PyTree:
@@ -154,7 +110,10 @@ class HiFTConfig:
     seed: int = 0
     use_cut: bool = True              # stop_gradient below the active group
     offload_optimizer: bool = True    # keep inactive opt state on host
-    fused_adamw: bool = False         # route update through the Pallas kernel
+    pipeline_depth: int = 1           # max device-resident bundles; >= 2
+                                      # double-buffers host<->device bundle
+                                      # transfers (core.pipeline) — bit-
+                                      # identical to the serial schedule
 
 
 @dataclasses.dataclass
@@ -164,6 +123,9 @@ class LiSAConfig:
     seed: int = 0
     use_cut: bool = True
     offload_optimizer: bool = True
+    pipeline_depth: int = 1           # as HiFTConfig: LiSA's sample is a
+                                      # pure fn of (seed, step), so step+1's
+                                      # group is prefetchable too
 
 
 @dataclasses.dataclass
@@ -393,6 +355,28 @@ class _GroupedStrategy(Strategy):
         # per-group caches: gi -> (jitted step, in_shardings|None) and
         # ("wb", gi) -> jitted sharded write_back
         self._step_fns: dict[Any, tuple[Callable, Any]] = {}
+        self._pipeline: Optional[BundlePipeline] = None
+
+    def _setup_pipeline(self, depth: int) -> None:
+        """Enable the double-buffered bundle pipeline (``core.pipeline``)
+        when ``depth`` >= 2 and there is actually something to overlap
+        (offloading on, more than one group).  Switches the strategy's
+        memory accounting to mode ``hift_pipelined`` — up to 2 bundles
+        device-resident instead of 1.
+
+        Depth is capped at 2 for now: ``memory_model``/``dryrun`` account
+        exactly one extra resident bundle, so a deeper lookahead would
+        under-report device memory (ROADMAP lists depth>2 as a follow-up;
+        ``BundlePipeline`` itself already handles arbitrary depth)."""
+        if depth <= 1 or not self.offload_optimizer or self.k <= 1:
+            return
+        if depth > 2:
+            raise ValueError(
+                f"pipeline_depth={depth} not supported yet: the memory "
+                "accounting (memory_model mode 'hift_pipelined', dryrun) "
+                "covers exactly 2 device-resident bundles — use 2")
+        self._pipeline = BundlePipeline(depth)
+        self.memory_mode = "hift_pipelined"
 
     def _cast_params(self, params: PyTree) -> PyTree:
         policy = self.policy
@@ -481,8 +465,18 @@ class _GroupedStrategy(Strategy):
             self._step_fns[key] = (fn, None)
         return self._step_fns[key][0](params, new_active)
 
-    def _group_step(self, state: TrainState, batch, gi: int,
-                    lr: float) -> tuple[PyTree, PyTree, jnp.ndarray]:
+    def _bundle_placement(self, bundle: PyTree) -> Optional[PyTree]:
+        """The sharding spec a group's bundle enters the jitted step under —
+        the SAME ``bundle_shardings`` composition ``group_step_shardings``
+        compiles arg 2 with, so a prefetched copy lands exactly where the
+        step will donate it (no re-layout at fetch time)."""
+        if not self.sharded:
+            return None
+        return dist_shardings.bundle_shardings(bundle, self.mesh)
+
+    def _group_step(self, state: TrainState, batch, gi: int, lr: float,
+                    next_gi: Optional[int] = None
+                    ) -> tuple[PyTree, PyTree, jnp.ndarray]:
         group = self.groups[gi]
         active, frozen = split_params(state.params, group)
         key = str(gi)
@@ -491,21 +485,34 @@ class _GroupedStrategy(Strategy):
         if fresh:
             bundle = self._init_bundle(active)
         lr = jnp.asarray(lr, jnp.float32)
+        pipe = self._pipeline
         with self._trace_ctx():
             fn, ins = self._fn(gi, (active, frozen, bundle, batch))
+            bspec = ins[2] if ins is not None else None
             if not fresh and self.offload_optimizer:
-                # host -> device, overlaps fwd; sharded bundles keep their
-                # partitioning and only change memory kind
-                bundle = device_put_async(
-                    bundle, ins[2] if ins is not None else None)
+                # host -> device; sharded bundles keep their partitioning and
+                # only change memory kind.  Pipelined, this is usually a
+                # cache hit on the copy prefetched during the PREVIOUS step.
+                bundle = (pipe.fetch(key, bundle, bspec) if pipe is not None
+                          else device_put_async(bundle, bspec))
             if ins is not None:
                 active, frozen, bundle, batch = jax.device_put(
                     (active, frozen, bundle, batch), ins[:4])
             new_active, new_bundle, loss = fn(active, frozen, bundle,
                                               batch, lr)
+        if pipe is not None and next_gi is not None and next_gi != gi:
+            # the step above is DISPATCHED, not done: start the next group's
+            # upload now so it overlaps this step's compute.  First-visit
+            # groups have no bundle yet (the step inits one) — nothing to
+            # prefetch then.
+            nbundle = state.opt_state.get(str(next_gi))
+            if nbundle is not None:
+                pipe.prefetch(str(next_gi), nbundle,
+                              self._bundle_placement(nbundle))
         if self.offload_optimizer:
-            new_bundle = host_put(new_bundle,
-                                  ins[2] if ins is not None else None)
+            new_bundle = (pipe.offload(key, new_bundle, bspec)
+                          if pipe is not None
+                          else host_put(new_bundle, bspec))
         opt_state = dict(state.opt_state)
         opt_state[key] = new_bundle
         return self._write_back(gi, state.params, new_active), opt_state, loss
@@ -540,6 +547,7 @@ class HiFTStrategy(_GroupedStrategy):
         self.use_cut = self.hift.use_cut
         self.offload_optimizer = self.hift.offload_optimizer
         self._setup_groups(self.hift.m)
+        self._setup_pipeline(self.hift.pipeline_depth)
         self.order = order_groups(self.groups, self.hift.strategy,
                                   self.hift.seed)
 
@@ -561,12 +569,41 @@ class HiFTStrategy(_GroupedStrategy):
 
     def step(self, state: TrainState, batch) -> tuple[TrainState, Metrics]:
         step = int(state.step)
-        gi = self._order_at(state)[step % self.k]
+        order = self._order_at(state)
+        gi = order[step % self.k]
+        # the sweep order makes step+1's group knowable NOW — that is what
+        # the bundle pipeline exploits (prefetch while this step computes)
+        next_gi = order[(step + 1) % self.k] if self._pipeline else None
         lr = self.schedule.delayed(step, self.k)
-        params, opt_state, loss = self._group_step(state, batch, gi, lr)
+        params, opt_state, loss = self._group_step(state, batch, gi, lr,
+                                                   next_gi=next_gi)
         new_state = TrainState(params, opt_state, step + 1, state.extra)
         return new_state, {"loss": loss, "lr": lr, "strategy": self.name,
                            "group": self.groups[gi].label()}
+
+
+@register_strategy("hift_pipelined")
+class PipelinedHiFTStrategy(HiFTStrategy):
+    """HiFT with the double-buffered bundle pipeline on by default
+    (``core.pipeline``): group g+1's optimizer bundle uploads while group
+    g's step computes, and g's offload drains during g+1 — bit-identical
+    states, the transfers just leave the critical path.  At most 2 bundles
+    are device-resident (``memory_model`` mode ``hift_pipelined``).
+
+    Registered separately so the registry-wide conformance battery holds the
+    pipelined schedule to the same contract as serial HiFT (purity,
+    mid-sweep checkpoint lockstep resume, memory-model agreement).
+    Checkpoints are interchangeable with plain ``hift`` — the pipeline is a
+    transfer cache, not state."""
+
+    name = "hift_pipelined"
+
+    def __init__(self, cfg, optimizer, *, hift: Optional[HiFTConfig] = None,
+                 **kwargs):
+        hift = hift if hift is not None else HiFTConfig()
+        if hift.pipeline_depth < 2:
+            hift = dataclasses.replace(hift, pipeline_depth=2)
+        super().__init__(cfg, optimizer, hift=hift, **kwargs)
 
 
 # ------------------------------------------------------------------- LiSA
@@ -592,6 +629,7 @@ class LiSAStrategy(_GroupedStrategy):
         self.use_cut = self.lisa.use_cut
         self.offload_optimizer = self.lisa.offload_optimizer
         self._setup_groups(self.lisa.m)
+        self._setup_pipeline(self.lisa.pipeline_depth)
 
     def lr_at(self, step: int) -> float:
         # LiSA trains on a plain per-step schedule (no sweep structure)
@@ -613,8 +651,12 @@ class LiSAStrategy(_GroupedStrategy):
     def step(self, state: TrainState, batch) -> tuple[TrainState, Metrics]:
         step = int(state.step)
         gi = self.group_index_at(step)
+        # the sample is a pure fn of (seed, step), so step+1's group is
+        # knowable now; the pipeline skips prefetch when it resamples to gi
+        next_gi = self.group_index_at(step + 1) if self._pipeline else None
         lr = self.lr_at(step)
-        params, opt_state, loss = self._group_step(state, batch, gi, lr)
+        params, opt_state, loss = self._group_step(state, batch, gi, lr,
+                                                   next_gi=next_gi)
         new_state = TrainState(params, opt_state, step + 1, state.extra)
         return new_state, {"loss": loss, "lr": lr, "strategy": self.name,
                            "group": self.groups[gi].label()}

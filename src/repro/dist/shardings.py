@@ -144,7 +144,13 @@ def bundle_shardings(bundle: PyTree, mesh) -> PyTree:
     """Placement for a grouped strategy's optimizer-state bundle
     (``{"opt": ..., "master"?: ...}``).  Moments and fp32 masters are
     param-shaped, so the structural param rule applies leaf-wise; scalar
-    leaves (counts) fall through to replicated."""
+    leaves (counts) fall through to replicated.
+
+    This is also the placement the bundle PIPELINE (``repro.core.pipeline``)
+    prefetches the next group's bundle under: identical to the spec
+    ``group_step_shardings`` compiles the step's bundle argument with, so a
+    prefetched copy is already exactly where the step will donate it and the
+    in-step ``device_put`` is a no-op (the donation-safe handshake)."""
     return param_shardings(bundle, mesh)
 
 
@@ -161,9 +167,11 @@ def group_step_shardings(mesh, active: PyTree, frozen: PyTree, bundle: PyTree,
     split over the data axes; ``lr`` and the loss replicate.  Specs are
     donation-safe (arg 0 / out 0 and arg 2 / out 1 match exactly); the
     grouped strategies donate only the bundle because active leaves can
-    alias the resident tree.  ``active_shardings`` overrides the structural
-    rule for the active tree (a strategy's ``param_sharding_fn`` hook lands
-    here)."""
+    alias the resident tree.  The bundle pipeline keeps that donation safe
+    by popping its prefetched reference before the step consumes it (see
+    ``core.pipeline.BundlePipeline.fetch``).  ``active_shardings`` overrides
+    the structural rule for the active tree (a strategy's
+    ``param_sharding_fn`` hook lands here)."""
     scalar = NamedSharding(mesh, P())
     a = active_shardings if active_shardings is not None \
         else param_shardings(active, mesh)

@@ -3,22 +3,29 @@
 TPU adaptation of LOMO's fused-update idea: param, grad, m, v stream
 HBM->VMEM tile by tile; the whole bias-corrected update runs in one VMEM
 pass (8 elementwise ops + rsqrt) and writes back param/m/v — vs 4 separate
-HBM sweeps for an unfused update.  Tiles are (8, 128)-aligned for the VPU.
+HBM sweeps for an unfused update.  Tiles are (8, 128)-aligned for the VPU;
+the shared layout/launch substrate lives in ``repro.kernels.ops``
+(``tile_layout`` pads so the grid always divides evenly, and the packed
+``fused_adamw_update`` fuses a whole group into one launch per dtype
+bucket).  On compiled non-CPU backends the param/m/v inputs are DONATED
+(``input_output_aliases``), so the update is in-place in HBM.
 """
 from __future__ import annotations
 
 import functools
 
-import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
+
+from repro.kernels.ops import elementwise_update_call
 
 
 def _adamw_kernel(p_ref, g_ref, m_ref, v_ref, lr_ref, c1_ref, c2_ref,
                   po_ref, mo_ref, vo_ref, *, b1, b2, eps, weight_decay):
     g = g_ref[...].astype(jnp.float32)
     m = b1 * m_ref[...] + (1.0 - b1) * g
-    v = b2 * v_ref[...] + (1.0 - b2) * g * g
+    # jnp.square, not g * g: XLA compiles the two differently at the last
+    # bit, and the unfused repro.optim.adamw (the bit-compare oracle) squares
+    v = b2 * v_ref[...] + (1.0 - b2) * jnp.square(g)
     mhat = m / c1_ref[0]
     vhat = v / c2_ref[0]
     p32 = p_ref[...].astype(jnp.float32)
@@ -29,44 +36,19 @@ def _adamw_kernel(p_ref, g_ref, m_ref, v_ref, lr_ref, c1_ref, c2_ref,
 
 
 def fused_adamw_pallas(p, g, m, v, *, lr, b1=0.9, b2=0.999, eps=1e-8,
-                       weight_decay=0.0, c1=1.0, c2=1.0, block: int = 1024,
-                       interpret: bool = True):
-    """Single-array fused update.  Arrays are flattened and tiled; the tail
-    is padded to the (8,128) VPU tile and sliced off after."""
+                       weight_decay=0.0, c1=1.0, c2=1.0, block: int = None,
+                       interpret: bool = None):
+    """Single-array fused update.  Arrays are flattened, zero-padded to a
+    whole number of (block_rows, 128) VPU tiles and streamed block by block;
+    ``interpret=None`` auto-selects from the backend (compiled on TPU)."""
     shape, dtype = p.shape, p.dtype
-    n = p.size
-    lanes = 1024  # 8 sublanes x 128 lanes
-    n_pad = (n + lanes - 1) // lanes * lanes
-
-    def prep(x, dt):
-        x = x.reshape(-1).astype(dt)
-        return jnp.pad(x, (0, n_pad - n)).reshape(n_pad // 128, 128)
-
-    pf = prep(p, dtype)
-    gf = prep(g, g.dtype)
-    mf = prep(m, jnp.float32)
-    vf = prep(v, jnp.float32)
-    rows = n_pad // 128
-    block_rows = min(block // 128, rows)
-    grid = (rows // block_rows,) if rows % block_rows == 0 else (rows // block_rows + 1,)
-
-    lr_a = jnp.asarray([lr], jnp.float32)
-    c1_a = jnp.asarray([c1], jnp.float32)
-    c2_a = jnp.asarray([c2], jnp.float32)
-
     kernel = functools.partial(_adamw_kernel, b1=b1, b2=b2, eps=eps,
                                weight_decay=weight_decay)
-    tile = lambda: pl.BlockSpec((block_rows, 128), lambda i: (i, 0))
-    scalar = lambda: pl.BlockSpec((1,), lambda i: (0,))
-    po, mo, vo = pl.pallas_call(
+    po, mo, vo = elementwise_update_call(
         kernel,
-        grid=grid,
-        in_specs=[tile(), tile(), tile(), tile(), scalar(), scalar(), scalar()],
-        out_specs=[tile(), tile(), tile()],
-        out_shape=[jax.ShapeDtypeStruct((rows, 128), dtype),
-                   jax.ShapeDtypeStruct((rows, 128), jnp.float32),
-                   jax.ShapeDtypeStruct((rows, 128), jnp.float32)],
-        interpret=interpret,
-    )(pf, gf, mf, vf, lr_a, c1_a, c2_a)
-    unprep = lambda x, dt: x.reshape(-1)[:n].reshape(shape).astype(dt)
-    return unprep(po, dtype), unprep(mo, jnp.float32), unprep(vo, jnp.float32)
+        [p, g, m.astype(jnp.float32), v.astype(jnp.float32)],
+        [lr, c1, c2],
+        [dtype, jnp.float32, jnp.float32],
+        n=p.size, block=block, interpret=interpret,
+        donate=((0, 0), (2, 1), (3, 2)))
+    return po.reshape(shape), mo.reshape(shape), vo.reshape(shape)

@@ -31,6 +31,23 @@ def fused_adamw_ref(p, g, m, v, *, lr, b1, b2, eps, weight_decay, c1, c2):
     return (p32 - step).astype(p.dtype), m_, v_
 
 
+def fused_sgdm_ref(p, g, mu, *, lr, momentum, weight_decay):
+    """Elementwise heavy-ball SGD (fp32 math), as ``repro.optim.sgd.sgdm``."""
+    p32 = p.astype(jnp.float32)
+    g32 = g.astype(jnp.float32) + weight_decay * p32
+    mu_ = momentum * mu + g32
+    return (p32 - lr * mu_).astype(p.dtype), mu_
+
+
+def fused_adagrad_ref(p, g, a, *, lr, eps, weight_decay):
+    """Elementwise AdaGrad (fp32 math), as ``repro.optim.adagrad``."""
+    p32 = p.astype(jnp.float32)
+    g32 = g.astype(jnp.float32) + weight_decay * p32
+    a_ = a + jnp.square(g32)
+    step = lr * g32 / (jnp.sqrt(a_) + eps)
+    return (p32 - step).astype(p.dtype), a_
+
+
 def ssm_scan_ref(x, a, b, c):
     """Sequential gated linear scan per head.
 

@@ -23,6 +23,7 @@ Outputs one JSON per cell under experiments/dryrun/.
 import argparse
 import dataclasses
 import json
+import math
 import re
 import time
 import traceback
@@ -149,19 +150,22 @@ def _abstract_params(cfg: ArchConfig, dtype=jnp.bfloat16):
 
 
 def lower_train_cell(cfg: ArchConfig, shape: ShapeConfig, mesh,
-                     strategy: str = "hift"):
+                     strategy: str = "hift", fused_update: bool = False):
     """Build + lower + compile the train step of ``strategy`` for a cell.
 
     Lowering needs abstract shapes and explicit shardings, so the cell step
     is built here rather than through ``Strategy.step`` — but the step BODY
     mirrors ``repro.core.strategy`` exactly (FPFTStrategy's full step; the
-    HiFT/Mixed^Hi per-group step with the paper's backward cut)."""
+    HiFT/Mixed^Hi per-group step with the paper's backward cut).
+    ``fused_update`` lowers the optimizer update through the Pallas fused
+    kernels instead of the unfused elementwise chain, proving the fused hot
+    path partitions under GSPMD for the cell."""
     if strategy not in ("hift", "fpft", "lomo"):
         raise ValueError(f"dry-run lowers hift|fpft|lomo cells, got {strategy!r}")
     fpft = strategy == "fpft"
     model = get_family(cfg)
     params_s = _abstract_params(cfg)
-    opt = make_optimizer("adamw")
+    opt = make_optimizer("adamw", use_pallas_fused=fused_update)
     batch_s = input_specs(cfg, shape)
     pshard = param_shardings(params_s, mesh)
     bshard = batch_shardings(batch_s, mesh)
@@ -254,8 +258,11 @@ def lower_train_cell(cfg: ArchConfig, shape: ShapeConfig, mesh,
         fn = jax.jit(step, in_shardings=(ashard, fshard, oshard, bshard, lr_shard))
         with mesh, activation_sharding(mesh, _daxes(mesh)):
             lowered = fn.lower(active_s, frozen_s, bundle_s, batch_s, lr_s)
+        bundle_bytes = sum(
+            math.prod(x.shape or (1,)) * jnp.dtype(x.dtype).itemsize
+            for x in jax.tree.leaves(bundle_s))
         groups_meta = {"mode": "hift", "k": len(groups), "group": group.label(),
-                       "cut": cut}
+                       "cut": cut, "bundle_bytes": int(bundle_bytes)}
     return lowered, groups_meta
 
 
@@ -292,7 +299,8 @@ def lower_serve_cell(cfg: ArchConfig, shape: ShapeConfig, mesh):
 
 
 def run_cell(arch_id: str, shape_name: str, multi_pod: bool = False,
-             strategy: str = "hift", save: bool = True) -> dict:
+             strategy: str = "hift", save: bool = True,
+             fused_update: bool = False, pipeline_depth: int = 1) -> dict:
     cfg = get_config(arch_id)
     shape = SHAPES[shape_name]
     ok, why = cell_supported(cfg, shape)
@@ -308,7 +316,11 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool = False,
     t0 = time.time()
     try:
         if shape.kind == "train":
-            lowered, meta = lower_train_cell(cfg, shape, mesh, strategy=strategy)
+            lowered, meta = lower_train_cell(cfg, shape, mesh,
+                                             strategy=strategy,
+                                             fused_update=fused_update)
+            meta["fused_update"] = fused_update
+            meta["pipeline_depth"] = pipeline_depth
         else:
             lowered, meta = lower_serve_cell(cfg, shape, mesh)
         compiled = lowered.compile()
@@ -349,6 +361,13 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool = False,
 
     per_dev_bytes = (mem.argument_size_in_bytes + mem.temp_size_in_bytes
                      + mem.output_size_in_bytes - mem.alias_size_in_bytes)
+    if meta.get("mode") == "hift" and pipeline_depth > 1:
+        # the bundle pipeline holds ONE extra bundle device-resident
+        # (prefetched or draining) beyond the step's own arguments; the
+        # bundle shards over the model axis, so per device it is /model
+        model_size = dict(zip(mesh.axis_names, mesh.devices.shape)) \
+            .get("model", 1)
+        per_dev_bytes += meta["bundle_bytes"] // max(model_size, 1)
     cell.update(
         status="ok", meta=meta, compile_s=round(time.time() - t0, 1),
         n_chips=n_chips,
@@ -407,6 +426,12 @@ def main():
     ap.add_argument("--strategy", default="hift",
                     choices=["hift", "fpft", "lomo"],
                     help="which train step to lower for train cells")
+    ap.add_argument("--fused-update", action="store_true",
+                    help="lower the optimizer update through the fused "
+                         "Pallas kernels (train cells)")
+    ap.add_argument("--pipeline-depth", type=int, default=1,
+                    help=">=2 accounts one extra device-resident bundle "
+                         "(the prefetched one) in the per-device memory")
     ap.add_argument("--fpft", action="store_true",
                     help="deprecated alias for --strategy fpft")
     args = ap.parse_args()
@@ -425,7 +450,9 @@ def main():
         for mp in meshes:
             cells.append((args.arch, args.shape, mp))
 
-    results = [run_cell(a, s, multi_pod=mp, strategy=strategy)
+    results = [run_cell(a, s, multi_pod=mp, strategy=strategy,
+                        fused_update=args.fused_update,
+                        pipeline_depth=args.pipeline_depth)
                for a, s, mp in cells]
     n_ok = sum(r["status"] == "ok" for r in results)
     n_skip = sum(r["status"] == "skipped" for r in results)

@@ -55,6 +55,17 @@ def main(argv=None):
                     help="LiSA re-sampling period")
     ap.add_argument("--grad-clip", type=float, default=1.0,
                     help="LOMO global-norm clip (0 disables the norm sweep)")
+    ap.add_argument("--fused-update", dest="fused_update",
+                    action="store_true", default=None,
+                    help="force the fused Pallas optimizer update "
+                         "(adamw/sgdm/adagrad); default auto: fused on TPU")
+    ap.add_argument("--no-fused-update", dest="fused_update",
+                    action="store_false",
+                    help="force the unfused elementwise update")
+    ap.add_argument("--pipeline-depth", type=int, default=None,
+                    help=">=2 double-buffers hift/lisa optimizer-bundle "
+                         "host<->device transfers (core.pipeline); "
+                         "hift_pipelined defaults to 2")
     ap.add_argument("--mesh", default=None,
                     help="device mesh for sharded steps: DxM (data x model, "
                          "e.g. 2x4) or name=size pairs (data=2,model=4)")
@@ -86,8 +97,10 @@ def main(argv=None):
     strategy = "fpft" if args.fpft else args.strategy
     sched = LRSchedule(base_lr=args.lr, kind="cosine",
                        total_cycles=max(args.steps, 1))
-    kw = {"schedule": sched, "policy": get_policy(args.policy), "mesh": mesh}
-    if strategy == "hift":
+    kw = {"schedule": sched, "policy": get_policy(args.policy), "mesh": mesh,
+          "fused_update": args.fused_update,
+          "pipeline_depth": args.pipeline_depth}
+    if strategy in ("hift", "hift_pipelined"):
         kw["hift"] = HiFTConfig(m=args.m, strategy=args.order, seed=args.seed)
     elif strategy == "lisa":
         kw["lisa"] = LiSAConfig(m=args.m, switch_every=args.switch_every,
@@ -98,7 +111,7 @@ def main(argv=None):
         kw["lomo"] = LOMOConfig(grad_clip=args.grad_clip)
     runner = make_runner(cfg, strategy, params=params,
                          optimizer=args.optimizer, seed=args.seed, **kw)
-    if strategy in ("hift", "lisa"):
+    if strategy in ("hift", "hift_pipelined", "lisa"):
         print(f"{strategy} k={runner.k}, "
               f"peak trainable {runner.peak_trainable_params()/1e6:.2f}M "
               f"({100*runner.peak_trainable_params()/n:.2f}%)")

@@ -8,7 +8,11 @@ from repro.optim.base import Optimizer, clip_by_global_norm
 
 
 def adagrad(eps: float = 1e-10, weight_decay: float = 0.0,
-            grad_clip: float = 0.0) -> Optimizer:
+            grad_clip: float = 0.0, use_pallas_fused: bool = False) -> Optimizer:
+    """``use_pallas_fused`` routes the elementwise update through the fused
+    Pallas kernel (kernels/fused_adagrad.py): one VMEM pass over
+    param+accum, bit-identical to the unfused math (test-enforced)."""
+
     def init(params):
         return {
             "accum": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
@@ -17,6 +21,14 @@ def adagrad(eps: float = 1e-10, weight_decay: float = 0.0,
 
     def update(grads, state, params, lr):
         grads = clip_by_global_norm(grads, grad_clip)
+
+        if use_pallas_fused:
+            from repro.kernels.ops import fused_adagrad_update
+            new_params, new_accum = fused_adagrad_update(
+                params, grads, state["accum"], lr=lr, eps=eps,
+                weight_decay=weight_decay)
+            return new_params, {"accum": new_accum,
+                                "count": state["count"] + 1}
 
         def upd(p, g, a):
             g32 = g.astype(jnp.float32) + weight_decay * p.astype(jnp.float32)

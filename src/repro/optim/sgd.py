@@ -28,8 +28,12 @@ def sgd(weight_decay: float = 0.0, grad_clip: float = 0.0) -> Optimizer:
 
 
 def sgdm(momentum: float = 0.9, weight_decay: float = 0.0,
-         grad_clip: float = 0.0) -> Optimizer:
-    """SGD with heavy-ball momentum: one moment per param (zeta_2 = zeta_1)."""
+         grad_clip: float = 0.0, use_pallas_fused: bool = False) -> Optimizer:
+    """SGD with heavy-ball momentum: one moment per param (zeta_2 = zeta_1).
+
+    ``use_pallas_fused`` routes the elementwise update through the fused
+    Pallas kernel (kernels/fused_sgdm.py): one VMEM pass over param+mu,
+    bit-identical to the unfused math (test-enforced)."""
 
     def init(params):
         return {
@@ -39,6 +43,13 @@ def sgdm(momentum: float = 0.9, weight_decay: float = 0.0,
 
     def update(grads, state, params, lr):
         grads = clip_by_global_norm(grads, grad_clip)
+
+        if use_pallas_fused:
+            from repro.kernels.ops import fused_sgdm_update
+            new_params, new_mu = fused_sgdm_update(
+                params, grads, state["mu"], lr=lr, momentum=momentum,
+                weight_decay=weight_decay)
+            return new_params, {"mu": new_mu, "count": state["count"] + 1}
 
         def upd(p, g, mu):
             g32 = g.astype(jnp.float32) + weight_decay * p.astype(jnp.float32)

@@ -55,3 +55,40 @@ def test_memory_decreases_with_k(m):
     r1 = analyze(shapes, units, optimizer="adamw", mode="hift", m=m)
     r2 = analyze(shapes, units, optimizer="adamw", mode="hift", m=m * 2)
     assert r2.pgs_gb >= r1.pgs_gb  # bigger groups -> more resident
+
+
+@pytest.mark.parametrize("opt", ["adamw", "sgdm", "adagrad", "adafactor"])
+def test_hift_pipelined_holds_exactly_two_bundles(opt):
+    """The bundle pipeline keeps the active group's optimizer state plus ONE
+    prefetched/draining bundle device-resident — so the pipelined mode must
+    account exactly 2x the serial HiFT state, nothing else changed."""
+    units, shapes = _shapes("roberta_base")
+    h = analyze(shapes, units, optimizer=opt, precision="fp32", mode="hift")
+    p = analyze(shapes, units, optimizer=opt, precision="fp32",
+                mode="hift_pipelined")
+    assert p.state_mb == 2 * h.state_mb
+    assert p.grad_mb == h.grad_mb          # still one backward, one group
+    assert p.para_mb == h.para_mb
+    assert p.peak_trainable == h.peak_trainable
+
+
+def test_hift_pipelined_mixed_hi_doubles_masters():
+    """Under Mixed^Hi the fp32 masters ride inside the bundles, so the
+    pipelined mode carries two master copies in #Para."""
+    units, shapes = _shapes("roberta_base")
+    h = analyze(shapes, units, precision="mixed_hi", mode="hift")
+    p = analyze(shapes, units, precision="mixed_hi", mode="hift_pipelined")
+    assert p.para_mb > h.para_mb
+    assert p.para_mb - h.para_mb == pytest.approx(
+        4 * h.peak_trainable / 2**20)
+
+
+def test_hift_pipelined_still_beats_fpft():
+    """2 resident bundles must not erode the paper's headline claim:
+    pipelined HiFT stays far below FPFT for any realistic k."""
+    units, shapes = _shapes("llama2_7b")
+    f = analyze(shapes, units, optimizer="adamw", precision="fp32",
+                mode="fpft")
+    p = analyze(shapes, units, optimizer="adamw", precision="fp32",
+                mode="hift_pipelined")
+    assert p.pgs_gb < 0.5 * f.pgs_gb

@@ -35,6 +35,16 @@ _PARAM = re.compile(r"\[([^\]]+)\]$")
 _WORD = re.compile(r"[a-z0-9]+")
 
 
+def _match(text: str) -> list[str]:
+    """Strategies named in ``text``: single-word names match as words,
+    composite names (hift_pipelined) as substrings; when a composite
+    matches, its base name is not also counted for the same text."""
+    words = set(_WORD.findall(text))
+    hits = [s for s in STRATEGIES
+            if s in words or ("_" in s and s in text)]
+    return [h for h in hits if not any(h != o and h in o for o in hits)]
+
+
 def strategies_of(testcase) -> list[str]:
     """All strategies a junit <testcase> is attributable to."""
     name = testcase.get("name", "")
@@ -42,11 +52,9 @@ def strategies_of(testcase) -> list[str]:
     hits = []
     m = _PARAM.search(name)
     if m:
-        hits = [s for s in STRATEGIES
-                if s in {w for w in _WORD.findall(m.group(1).lower())}]
+        hits = _match(m.group(1).lower())
     if not hits:
-        words = set(_WORD.findall(f"{classname} {name}".lower()))
-        hits = [s for s in STRATEGIES if s in words]
+        hits = _match(f"{classname} {name}".lower())
     return hits
 
 
