@@ -1,8 +1,10 @@
 """Paper Tables 8-12 analogue: #Trainable/#Para/#Gra/#Sta/#PGS for
 FPFT vs HiFT across optimizers and precisions, per model — plus the
-gradient-free (mezo) and fused-backward (lomo) registry strategies, whose
-rows show #Sta = 0 and #Gra = 0 / one-fused-unit respectively (they are
-optimizer-independent, so they print once per precision under "sgd").
+gradient-free (mezo) and fused-backward (lomo, adalomo) registry
+strategies: mezo/lomo rows show #Sta = 0 and #Gra = 0 / one-fused-unit
+respectively, adalomo rows the same one-unit #Gra plus the factored
+row/col second moments as #Sta (sub-linear, ~MBs at 7B).  All three own
+their update rule, so they print once per precision under "sgd".
 
 Validates the paper's headline numbers:
   - RoBERTa-base  FPFT fp32 AdamW #PGS ~1.86 GB, HiFT ~0.90 GB (Table 8)
@@ -40,11 +42,11 @@ def run(csv=True):
         cfg, units, shapes = shapes_for(arch)
         for opt in OPTIMIZERS:
             for prec in PRECISIONS:
-                for mode in ["fpft", "hift", "mezo", "lomo"]:
+                for mode in ["fpft", "hift", "mezo", "lomo", "adalomo"]:
                     if mode == "fpft" and prec == "mixed_hi":
                         continue
-                    if mode in ("mezo", "lomo") and opt != "sgd":
-                        continue   # no optimizer state: one row per precision
+                    if mode in ("mezo", "lomo", "adalomo") and opt != "sgd":
+                        continue   # own update rule: one row per precision
                     t0 = time.time()
                     rep = analyze(shapes, units, optimizer=opt,
                                   precision=prec, mode=mode, m=1)
@@ -90,8 +92,18 @@ def check_paper_claims():
     assert rep_l.grad_mb < 0.1 * rep_f.grad_mb, (rep_l.grad_mb, rep_f.grad_mb)
     rep_z = analyze(shapes, units, optimizer="sgd", precision="fp32", mode="mezo")
     assert rep_z.grad_mb == 0.0 and rep_z.state_mb == 0.0
+    # AdaLomo: LOMO's gradient story + factored second moments as the ONLY
+    # state — sub-linear, the paper's ~0.2 MB-scale Adafactor #Sta column
+    # (single-digit MBs at 7B) against AdamW's 2 * zeta1
+    rep_al = analyze(shapes, units, optimizer="sgd", precision="fp32",
+                     mode="adalomo")
+    rep_adamw = analyze(shapes, units, optimizer="adamw", precision="fp32",
+                        mode="fpft")
+    assert rep_al.grad_mb == rep_l.grad_mb, (rep_al.grad_mb, rep_l.grad_mb)
+    assert 0.0 < rep_al.state_mb < 20.0, rep_al.state_mb
+    assert rep_al.state_mb < 1e-3 * rep_adamw.state_mb
     print("paper-claims: OK (Appendix B eqs, Table 8/12 columns, LOMO/MeZO "
-          "no-grad-tree rows within tol)")
+          "no-grad-tree rows, AdaLomo factored-stats row within tol)")
     return True
 
 

@@ -17,7 +17,7 @@ cfg = ArchConfig(name="quickstart", family="dense", n_layers=4, d_model=128,
                  block_q=32, block_k=32, ce_chunk=32)
 
 runner = make_runner(
-    cfg, strategy="hift",                         # or: fpft | mezo | lisa | lomo
+    cfg, strategy="hift",                 # or: fpft | mezo | lisa | lomo | adalomo
     optimizer="adamw",
     hift=HiFTConfig(m=1, strategy="bottom2up"),   # paper Algorithm 1
     schedule=LRSchedule(base_lr=2e-3),            # delayed per-cycle LR

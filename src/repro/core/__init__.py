@@ -4,12 +4,14 @@ from repro.core.scheduler import LRSchedule
 from repro.core.pipeline import BundlePipeline, PipelineStats
 from repro.core.strategy import (TrainState, Strategy, Runner,
                                  HiFTConfig, LiSAConfig, MeZOConfig,
-                                 LOMOConfig, HiFTStrategy, FPFTStrategy,
-                                 LiSAStrategy, MeZOStrategy, LOMOStrategy,
+                                 LOMOConfig, AdaLomoConfig, HiFTStrategy,
+                                 FPFTStrategy, LiSAStrategy, MeZOStrategy,
+                                 LOMOStrategy, AdaLomoStrategy,
                                  PipelinedHiFTStrategy,
                                  build_fpft_step, fpft_step_body,
-                                 lomo_step_body, write_back,
-                                 host_put, device_put_async)
+                                 lomo_step_body, adalomo_step_body,
+                                 adalomo_init_opt_state, lomo_pieces_of,
+                                 write_back, host_put, device_put_async)
 from repro.core import registry
 from repro.core.registry import (get_strategy_cls, make_runner, make_strategy,
                                  register_strategy)

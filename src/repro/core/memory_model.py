@@ -98,7 +98,7 @@ def analyze(shapes: PyTree, units: Sequence[Unit], *, optimizer: str = "adamw",
             precision: str = "fp32", mode: str = "hift", m: int = 1) -> MemoryReport:
     """shapes: params tree or jax.eval_shape(init) tree.
     precision: fp32 | mixed | mixed_hi.
-    mode: fpft | hift | hift_pipelined | mezo | lomo.
+    mode: fpft | hift | hift_pipelined | mezo | lomo | adalomo.
 
     Per-mode accounting (matching the registry strategies' own
     ``peak_trainable_params`` / ``peak_grad_params``):
@@ -112,13 +112,21 @@ def analyze(shapes: PyTree, units: Sequence[Unit], *, optimizer: str = "adamw",
       - mezo: everything trainable but NO gradients and NO optimizer state
         (two forward passes — memory ~= inference).
       - lomo: everything trainable, no optimizer state, and gradient
-        residency bounded by the largest single unit — the fused backward
-        consumes each layer's gradient before the next materializes, so the
-        full grad tree of FPFT/SGD never exists."""
+        residency bounded by one fused grain — ``m`` consecutive units (the
+        strategies pass their pieces' ``liveness_m``: 1 for plain per-layer
+        stacks, a super-block for zamba2/xlstm) — the fused backward
+        consumes each grain's gradient before the next materializes, so the
+        full grad tree of FPFT/SGD never exists.
+      - adalomo: lomo's gradient story, plus the ONLY resident optimizer
+        state being Adafactor-style factored second moments — r+c fp32
+        stats per (r, c) matrix, per layer for stacked segments — priced
+        regardless of the ``optimizer`` argument (the strategy owns its
+        update rule)."""
     acc = _Accountant(shapes, units)
     n = acc.total()
     groups = make_groups(acc.units, m)
     hift_modes = ("hift", "hift_pipelined")
+    fused_modes = ("lomo", "adalomo")
 
     if mode == "fpft":
         peak, gsize = n, n
@@ -127,9 +135,9 @@ def analyze(shapes: PyTree, units: Sequence[Unit], *, optimizer: str = "adamw",
         gsize = peak
     elif mode == "mezo":
         peak, gsize = n, 0
-    elif mode == "lomo":
+    elif mode in fused_modes:
         peak = n
-        gsize = max(acc.group_params(g) for g in make_groups(acc.units, 1))
+        gsize = max(acc.group_params(g) for g in groups)
     else:
         raise ValueError(mode)
     # device-resident optimizer bundles: the pipelined schedule holds the
@@ -137,9 +145,10 @@ def analyze(shapes: PyTree, units: Sequence[Unit], *, optimizer: str = "adamw",
     # blocks before a third could land); serial holds exactly one
     resident_bundles = min(2, len(groups)) if mode == "hift_pipelined" else 1
     # fp32 master copies under Mixed^Hi ride in the bundles: whatever is
-    # being updated at one instant (hift: the active group; lomo: one fused
-    # unit; mezo: nothing is grad-updated) x resident bundles
-    master = gsize if mode in ("mezo", "lomo") else peak * resident_bundles
+    # being updated at one instant (hift: the active group; lomo/adalomo:
+    # one fused grain; mezo: nothing is grad-updated) x resident bundles
+    master = gsize if mode in ("mezo",) + fused_modes \
+        else peak * resident_bundles
 
     # --- weights resident (#Para) ---
     if precision == "fp32":
@@ -155,6 +164,13 @@ def analyze(shapes: PyTree, units: Sequence[Unit], *, optimizer: str = "adamw",
 
     if mode in ("mezo", "lomo"):
         state = 0                        # no optimizer state by construction
+    elif mode == "adalomo":
+        # the factored second moments are the strategy's own (and only)
+        # state — priced whatever the ``optimizer`` argument says
+        whole = Group(0, tuple(acc.units),
+                      tuple(u.key for u in acc.units if u.kind == "dense"),
+                      tuple((key, 0, ln) for key, ln in acc.stack_len.items()))
+        state = acc.group_adafactor_bytes(whole)
     elif optimizer == "adafactor":
         if mode == "fpft":
             whole = Group(0, tuple(acc.units),

@@ -8,9 +8,10 @@ entry point for building a training driver:
     loss = runner.train_step(batch)
 
 Everything downstream (train/loop.py, launch/train.py, dry-run, benchmarks,
-examples) programs against this surface; ``hift|fpft|mezo|lisa|lomo`` are
-the built-ins — all mesh-aware via ``make_runner(..., mesh=...)`` — and new
-strategies plug in with one ``@register_strategy`` line.  Every entry in
+examples) programs against this surface;
+``hift|hift_pipelined|fpft|mezo|lisa|lomo|adalomo`` are the built-ins — all
+mesh-aware via ``make_runner(..., mesh=...)`` — and new strategies plug in
+with one ``@register_strategy`` line.  Every entry in
 the registry is held to one shared contract (purity, checkpoint
 round-trips, metrics, memory accounting) by
 ``tests/test_strategy_conformance.py``; registering a strategy buys that

@@ -33,6 +33,13 @@ Built-in strategies (registered in ``repro.core.registry``):
                pass, consuming each layer's gradient in cotangent order, so
                a full gradient tree never materializes; like MeZO the
                optimizer bundle is empty.
+  - ``adalomo`` : AdaLomo ("AdaLomo: Low-memory Optimization with Adaptive
+               Learning Rate", Lv et al. 2023) — the same fused backward,
+               but each layer's in-scan update is Adafactor-grade (factored
+               row/col second moments + per-matrix update-RMS clipping,
+               reusing ``repro.optim.adafactor``'s leaf math).  The factored
+               statistics — O(r+c) floats per matrix — are the ONLY resident
+               optimizer state; gradients still die layer-by-layer.
   - ``hift_pipelined`` : HiFT with the double-buffered bundle pipeline
                (``repro.core.pipeline``) on by default — next group's
                optimizer bundle uploads while the current step computes;
@@ -70,7 +77,9 @@ from repro.core.pipeline import BundlePipeline, device_put_async, host_put
 from repro.core.registry import register_strategy
 from repro.core.scheduler import LRSchedule
 from repro.models import get_family, unit_first_depth
+from repro.models.base import LomoPieces
 from repro.optim import base as opt_base
+from repro.optim.adafactor import beta2_at, leaf_update, moment_init
 from repro.optim.base import Optimizer
 from repro.optim.mezo import mezo_step
 from repro.optim.mixed_precision import FP32, Policy
@@ -140,6 +149,18 @@ class LOMOConfig:
                                       # >0 adds the paper's second backward
                                       # sweep to compute the norm first
     weight_decay: float = 0.0         # decoupled, as in repro.optim.sgd
+
+
+@dataclasses.dataclass
+class AdaLomoConfig:
+    grad_clip: float = 0.0            # global-norm clip (0 = off, the
+                                      # default: the per-matrix update-RMS
+                                      # clip below already bounds steps);
+                                      # >0 adds LOMO's norm-only sweep
+    weight_decay: float = 0.0         # decoupled, inside the leaf update
+    eps1: float = 1e-30               # Adafactor's gradient-square epsilon
+    clip_threshold: float = 1.0       # per-matrix update-RMS clip d
+    decay_rate: float = 0.8           # beta2 schedule 1 - t^-decay_rate
 
 
 # -------------------------------------------------------------- TrainState
@@ -928,6 +949,347 @@ def _lomo_fused_body(cfg, pieces, grad_clip: float,
     return step
 
 
+# ------------------------------------------- staged pieces (LomoPieces)
+#
+# The generalized fused-backward driver for families exposing the staged
+# ``models.base.LomoPieces`` protocol (moe / hybrid / xlstm / encdec; the
+# dense transformer keeps its original 3-tuple body above).  One forward
+# saves per-stage layer inputs; the reverse traversal below runs one
+# layer's vjp per scan iteration and hands its gradient to a consume
+# callback (SGD update, Adafactor update, or norm-only reduction), so
+# gradient residency stays one fused grain + the small accumulating
+# segments (embed, shared, the side cotangent).
+
+
+def _tadd(a, b):
+    """Leafwise add, None-transparent (None = empty cotangent)."""
+    if a is None:
+        return b
+    if b is None:
+        return a
+    return jax.tree.map(jnp.add, a, b)
+
+
+def _tzeros(t):
+    return None if t is None else jax.tree.map(jnp.zeros_like, t)
+
+
+def _pieces_forward(pieces: LomoPieces, ep, stages, sp, hp, batch):
+    """Run the segmented forward, saving each stage's layer inputs.
+
+    Returns ``(loss, head_vjp, saved)`` where ``saved[i] = (resid, side,
+    init_vjp)`` — everything the reverse traversal needs.  ``init_vjp`` is
+    the vjp of stage i's ``stage_inits`` w.r.t. ``(embed_p,
+    prev_stage_out)``: pulling ``(dh0, dside)`` back through it yields that
+    stage's embedding-gradient contribution and the cotangent seeding the
+    previous stage's reverse scan."""
+    saved = []
+    prev = None
+    for i, fn in enumerate(pieces.stage_fns):
+        init_i = pieces.stage_inits[i]
+        (h0, side), init_vjp = jax.vjp(
+            lambda e, pv, init_i=init_i: init_i(e, pv, batch), ep, prev)
+
+        def fwd(h, lp, fn=fn, side=side):
+            return fn(lp, sp, side, h), h       # save the layer INPUT
+
+        h_out, resid = jax.lax.scan(fwd, h0, stages[i])
+        saved.append((resid, side, init_vjp))
+        prev = h_out
+    loss, head_vjp = jax.vjp(
+        lambda H, E, x: pieces.head_loss_fn(H, E, x, batch), hp, ep, prev)
+    return loss, head_vjp, saved
+
+
+def _pieces_reverse(pieces: LomoPieces, sp, stages, saved, dh,
+                    consume: Callable, stage_extra=None):
+    """Reverse-scan every stage (last to first), consuming gradients.
+
+    ``consume(i, layer_p, g_layer, extra_slice) -> ys`` runs inside stage
+    i's reverse scan with ONE layer's full gradient; whatever pytree it
+    returns rides the scan ys (per-stage stacked in ``ys_all[i]``).
+    ``stage_extra[i]`` threads extra per-layer scan inputs (AdaLomo's
+    moment slices).  Shared-segment and side cotangents accumulate in the
+    scan carry; stage-init vjps chain ``dh`` backwards and collect the
+    embedding gradient.  Returns ``(g_embed_from_inits, g_shared, ys_all)``.
+    """
+    g_emb = None
+    g_sh = None
+    ys_all = [None] * len(pieces.stage_fns)
+    for i in reversed(range(len(pieces.stage_fns))):
+        resid, side, init_vjp = saved[i]
+        fn = pieces.stage_fns[i]
+        extra = None if stage_extra is None else stage_extra[i]
+
+        def body(carry, xs, fn=fn, side=side, i=i, has_extra=extra is not None):
+            dh_c, dside, gsh = carry
+            if has_extra:
+                lp, h_in, ex = xs
+            else:
+                lp, h_in = xs
+                ex = None
+            _, vjp = jax.vjp(lambda p, s, sd, x: fn(p, s, sd, x),
+                             lp, sp, side, h_in)
+            g_layer, g_shared, g_side, dh_below = vjp(dh_c)
+            return ((dh_below, _tadd(dside, g_side), _tadd(gsh, g_shared)),
+                    consume(i, lp, g_layer, ex))
+
+        xs = (stages[i], resid) if extra is None else (stages[i], resid, extra)
+        carry0 = (dh, _tzeros(side), _tzeros(sp))
+        (dh0, dside, gsh_i), ys_all[i] = jax.lax.scan(body, carry0, xs,
+                                                      reverse=True)
+        g_sh = _tadd(g_sh, gsh_i)
+        g_e, dh = init_vjp((dh0, dside))
+        g_emb = _tadd(g_emb, g_e)
+    return g_emb, g_sh, ys_all
+
+
+def _lomo_pieces_body(cfg, pieces: LomoPieces, grad_clip: float,
+                      weight_decay: float) -> Callable:
+    """The staged fused step with LOMO's SGD update (same two-backward
+    clipping protocol as ``_lomo_fused_body``; the clip scale always comes
+    from the norm-only sweep's exact global norm)."""
+
+    def step(params, batch, lr):
+        ep, stages, sp, hp = pieces.split(params)
+        loss, head_vjp, saved = _pieces_forward(pieces, ep, stages, sp, hp,
+                                                batch)
+        one = jnp.ones_like(loss)
+
+        def sweep(scale):
+            """scale None -> norm-only (grads reduced to squared sums)."""
+            g_head, g_emb_head, dh = head_vjp(one)
+            update = scale is not None
+
+            def consume(i, lp, g, ex):
+                if update:
+                    return (_sgd_tree(lp, g, lr, scale, weight_decay),
+                            _tree_sqsum(g))
+                return _tree_sqsum(g)
+
+            g_emb, g_sh, ys = _pieces_reverse(pieces, sp, stages, saved, dh,
+                                              consume)
+            g_emb = _tadd(g_emb, g_emb_head)   # tied heads; zeros otherwise
+            sq = (_tree_sqsum(g_head) + _tree_sqsum(g_emb)
+                  + _tree_sqsum(g_sh))
+            if not update:
+                return None, sq + sum(jnp.sum(y) for y in ys)
+            sq = sq + sum(jnp.sum(y[1]) for y in ys)
+            new_ep = _sgd_tree(ep, g_emb, lr, scale, weight_decay)
+            new_sp = (_sgd_tree(sp, g_sh, lr, scale, weight_decay)
+                      if sp is not None else None)
+            new_hp = _sgd_tree(hp, g_head, lr, scale, weight_decay)
+            new_stages = tuple(y[0] for y in ys)
+            return pieces.merge(new_ep, new_stages, new_sp, new_hp), sq
+
+        if grad_clip and grad_clip > 0:
+            _, sq = sweep(None)
+            new_params, _ = sweep(opt_base.clip_scale(grad_clip, sq))
+        else:
+            new_params, sq = sweep(jnp.float32(1.0))
+        return new_params, loss, jnp.sqrt(sq)
+
+    return step
+
+
+def _staged_pieces(model, cfg, compute_dtype) -> Optional[LomoPieces]:
+    """The family's ``lomo_pieces`` as a staged :class:`LomoPieces` (legacy
+    3-tuples are adapted), or None when the family has none."""
+    if not hasattr(model, "lomo_pieces"):
+        return None
+    pieces = model.lomo_pieces(cfg, compute_dtype=compute_dtype)
+    if isinstance(pieces, LomoPieces):
+        return pieces
+    return LomoPieces.from_embed_block_head(*pieces)
+
+
+def lomo_pieces_of(cfg, policy: Policy = FP32) -> Optional[LomoPieces]:
+    """Public probe used by strategies/tests: the staged pieces a config's
+    family would train the fused path with (None -> fallback)."""
+    return _staged_pieces(get_family(cfg), cfg, policy.compute_dtype)
+
+
+# ---------------------------------------------------------------- AdaLomo
+
+
+def adalomo_init_opt_state(cfg, params: PyTree) -> PyTree:
+    """AdaLomo's resident optimizer state: Adafactor-style factored second
+    moments for every leaf — O(r+c) floats per matrix — plus the shared
+    step count.  Stacked segments (from the family's ``unit_spec``) factor
+    PER LAYER, so a ``(L, r, c)`` trunk leaf stores ``vr (L, r)`` /
+    ``vc (L, c)`` and a stacked bias ``(L, d)`` keeps a full per-layer
+    ``v`` instead of being factored across layers."""
+    model = get_family(cfg)
+    stacked = {u.key for u in model.unit_spec(cfg) if u.kind == "stacked"}
+    moments = {
+        key: jax.tree.map(
+            lambda p, _s=(key in stacked): moment_init(p, stacked=_s), sub)
+        for key, sub in params.items()
+    }
+    return {"moments": moments, "count": jnp.zeros((), jnp.int32)}
+
+
+def _ada_tree(params: PyTree, grads: PyTree, moms: PyTree, lr, beta2, scale,
+              acfg: "AdaLomoConfig"):
+    """One Adafactor update over a (sub-)tree with pre-scaled (clipped)
+    gradients -> ``(new_params, new_moments)``.  ``matrix_rms=True`` makes
+    the update-RMS clip per trailing matrix, so applying this to a whole
+    stacked segment (fallback path) and to its per-layer slices inside the
+    reverse scan (fused path) is the same arithmetic."""
+
+    def upd(p, g, m):
+        g = (g * scale).astype(g.dtype)
+        return leaf_update(p, g, m, lr, beta2, eps1=acfg.eps1,
+                           clip_threshold=acfg.clip_threshold,
+                           weight_decay=acfg.weight_decay, matrix_rms=True)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(moms)
+    out = [upd(p, g, m) for p, g, m in zip(flat_p, flat_g, flat_m)]
+    return (treedef.unflatten([o[0] for o in out]),
+            treedef.unflatten([o[1] for o in out]))
+
+
+def _adalomo_pieces_body(cfg, pieces: LomoPieces,
+                         acfg: "AdaLomoConfig") -> Callable:
+    """The fused AdaLomo step: same reverse scans as LOMO, but each layer's
+    gradient feeds an Adafactor update whose factored moments ride the scan
+    as per-layer xs/ys slices (``pieces.split``/``merge`` restructure the
+    moment tree exactly like the params — leading dims only).  Segments
+    whose total gradient only exists at the end of the traversal (embed,
+    zamba2's shared block) accumulate their gradient — one segment-sized
+    buffer — and update once; Adafactor is nonlinear in the gradient, so
+    unlike SGD those updates cannot be split into increments."""
+
+    def step(params, opt_state, batch, lr):
+        ep, stages, sp, hp = pieces.split(params)
+        ep_m, stage_ms, sp_m, hp_m = pieces.split(opt_state["moments"])
+        count = opt_state["count"] + 1
+        beta2 = beta2_at(count, acfg.decay_rate)
+        loss, head_vjp, saved = _pieces_forward(pieces, ep, stages, sp, hp,
+                                                batch)
+        one = jnp.ones_like(loss)
+
+        def norm_sweep():
+            g_head, g_emb_head, dh = head_vjp(one)
+            g_emb, g_sh, ys = _pieces_reverse(
+                pieces, sp, stages, saved, dh,
+                lambda i, lp, g, ex: _tree_sqsum(g))
+            g_emb = _tadd(g_emb, g_emb_head)
+            return (_tree_sqsum(g_head) + _tree_sqsum(g_emb)
+                    + _tree_sqsum(g_sh) + sum(jnp.sum(y) for y in ys))
+
+        def update_sweep(scale):
+            g_head, g_emb_head, dh = head_vjp(one)
+
+            def consume(i, lp, g, mom):
+                new_lp, new_m = _ada_tree(lp, g, mom, lr, beta2, scale, acfg)
+                return new_lp, new_m, _tree_sqsum(g)
+
+            g_emb, g_sh, ys = _pieces_reverse(pieces, sp, stages, saved, dh,
+                                              consume, stage_extra=stage_ms)
+            g_emb = _tadd(g_emb, g_emb_head)
+            new_hp, new_hp_m = _ada_tree(hp, g_head, hp_m, lr, beta2, scale,
+                                         acfg)
+            new_ep, new_ep_m = _ada_tree(ep, g_emb, ep_m, lr, beta2, scale,
+                                         acfg)
+            if sp is not None:
+                new_sp, new_sp_m = _ada_tree(sp, g_sh, sp_m, lr, beta2,
+                                             scale, acfg)
+            else:
+                new_sp, new_sp_m = None, None
+            sq = (_tree_sqsum(g_head) + _tree_sqsum(g_emb)
+                  + _tree_sqsum(g_sh) + sum(jnp.sum(y[2]) for y in ys))
+            new_params = pieces.merge(new_ep, tuple(y[0] for y in ys),
+                                      new_sp, new_hp)
+            new_moms = pieces.merge(new_ep_m, tuple(y[1] for y in ys),
+                                    new_sp_m, new_hp_m)
+            return new_params, new_moms, sq
+
+        if acfg.grad_clip and acfg.grad_clip > 0:
+            sq = norm_sweep()
+            new_params, new_moms, _ = update_sweep(
+                opt_base.clip_scale(acfg.grad_clip, sq))
+        else:
+            new_params, new_moms, sq = update_sweep(jnp.float32(1.0))
+        return (new_params, {"moments": new_moms, "count": count}, loss,
+                jnp.sqrt(sq))
+
+    return step
+
+
+def _adalomo_generic_body(cfg, loss_fn: Callable, compute_dtype,
+                          acfg: "AdaLomoConfig") -> Callable:
+    """Fallback for families without ``lomo_pieces`` (or a custom loss_fn):
+    segment-tuple vjp exactly like LOMO's, with the Adafactor update applied
+    per top-level segment.  The stacked-aware moment layout + per-matrix RMS
+    make this the same arithmetic as the fused path, just with coarser
+    gradient liveness (one whole segment at a time)."""
+
+    def step(params, opt_state, batch, lr):
+        keys = list(params)
+        count = opt_state["count"] + 1
+        beta2 = beta2_at(count, acfg.decay_rate)
+
+        def loss_of(*parts):
+            return loss_fn(cfg, dict(zip(keys, parts)), batch,
+                           compute_dtype=compute_dtype)
+
+        loss, pullback = jax.vjp(loss_of, *(params[key] for key in keys))
+        one = jnp.ones_like(loss)
+
+        def sweep(scale):
+            gparts = pullback(one)
+            sq = jnp.float32(0.0)
+            new_p, new_m = {}, {}
+            for key, g in reversed(list(zip(keys, gparts))):  # cotangent order
+                sq = sq + _tree_sqsum(g)
+                if scale is not None:
+                    new_p[key], new_m[key] = _ada_tree(
+                        params[key], g, opt_state["moments"][key], lr, beta2,
+                        scale, acfg)
+            if scale is None:
+                return sq, None, None
+            return (sq, {key: new_p[key] for key in keys},
+                    {key: new_m[key] for key in keys})
+
+        if acfg.grad_clip and acfg.grad_clip > 0:
+            sq, _, _ = sweep(None)
+            _, new_params, new_moms = sweep(
+                opt_base.clip_scale(acfg.grad_clip, sq))
+        else:
+            sq, new_params, new_moms = sweep(jnp.float32(1.0))
+        return (new_params, {"moments": new_moms, "count": count}, loss,
+                jnp.sqrt(sq))
+
+    return step
+
+
+def adalomo_step_body(cfg, policy: Policy = FP32,
+                      loss_fn: Optional[Callable] = None,
+                      adalomo: Optional["AdaLomoConfig"] = None,
+                      pieces=None) -> Callable:
+    """The un-jitted AdaLomo step ``step(params, opt_state, batch, lr) ->
+    (new_params, new_opt_state, loss, grad_norm)`` with ``opt_state`` from
+    :func:`adalomo_init_opt_state`.  Dispatches like :func:`lomo_step_body`
+    (and takes the same optional pre-resolved ``pieces``): staged/legacy
+    ``lomo_pieces`` -> the fused per-layer reverse scan, otherwise the
+    segment-vjp fallback.  ``launch.dryrun`` lowers this body directly for
+    its ``--strategy adalomo`` cells."""
+    acfg = adalomo if adalomo is not None else AdaLomoConfig()
+    model = get_family(cfg)
+    if loss_fn is None:
+        if pieces is None and hasattr(model, "lomo_pieces"):
+            pieces = model.lomo_pieces(cfg, compute_dtype=policy.compute_dtype)
+        if pieces is not None:
+            if not isinstance(pieces, LomoPieces):
+                pieces = LomoPieces.from_embed_block_head(*pieces)
+            return _adalomo_pieces_body(cfg, pieces, acfg)
+    return _adalomo_generic_body(cfg, loss_fn or model.loss_fn,
+                                 policy.compute_dtype, acfg)
+
+
 def _lomo_generic_body(cfg, loss_fn: Callable, compute_dtype, grad_clip: float,
                        weight_decay: float) -> Callable:
     """Fallback for families without ``lomo_pieces`` (or a custom loss_fn):
@@ -971,24 +1333,91 @@ def _lomo_generic_body(cfg, loss_fn: Callable, compute_dtype, grad_clip: float,
 
 
 def lomo_step_body(cfg, policy: Policy = FP32, loss_fn: Optional[Callable] = None,
-                   lomo: Optional[LOMOConfig] = None) -> Callable:
+                   lomo: Optional[LOMOConfig] = None,
+                   pieces=None) -> Callable:
     """The un-jitted LOMO step ``step(params, batch, lr) -> (new_params,
     loss, grad_norm)``.  Dispatches to the per-layer fused backward when the
     model family exposes ``lomo_pieces`` and no custom ``loss_fn`` overrides
-    the forward; otherwise to the segment-wise vjp fallback.
+    the forward; otherwise to the segment-wise vjp fallback.  ``pieces``
+    lets a caller that already resolved the family's ``lomo_pieces`` (the
+    strategies, which also read the fused grain off them) pass the same
+    object in instead of re-building it.
     ``launch.dryrun`` lowers this body directly for its LOMO cells."""
     lomo = lomo if lomo is not None else LOMOConfig()
     model = get_family(cfg)
-    if loss_fn is None and hasattr(model, "lomo_pieces"):
-        pieces = model.lomo_pieces(cfg, compute_dtype=policy.compute_dtype)
-        return _lomo_fused_body(cfg, pieces, lomo.grad_clip, lomo.weight_decay)
+    if loss_fn is None:
+        if pieces is None and hasattr(model, "lomo_pieces"):
+            pieces = model.lomo_pieces(cfg, compute_dtype=policy.compute_dtype)
+        if isinstance(pieces, LomoPieces):
+            # staged protocol (moe/hybrid/xlstm/encdec): generalized driver
+            return _lomo_pieces_body(cfg, pieces, lomo.grad_clip,
+                                     lomo.weight_decay)
+        if pieces is not None:   # legacy 3-tuple (dense transformer)
+            return _lomo_fused_body(cfg, pieces, lomo.grad_clip,
+                                    lomo.weight_decay)
     return _lomo_generic_body(cfg, loss_fn or model.loss_fn,
                               policy.compute_dtype, lomo.grad_clip,
                               lomo.weight_decay)
 
 
+class _FusedBackwardStrategy(Strategy):
+    """Shared machinery for the fused-backward strategies (LOMO/AdaLomo):
+    one-time ``lomo_pieces`` resolution (fused path vs segment-vjp
+    fallback, plus the fused grain feeding the memory accounting), the
+    gradient-residency accounting itself, and the jitted-step cache with
+    donation-safe shardings.  Subclasses set ``_donate`` (non-CPU donated
+    arg positions), implement ``_step_shardings(example)``, and build
+    ``self._body`` from the ONE pieces object ``_setup_fused`` resolved."""
+
+    _donate: tuple = (0,)
+
+    def _setup_fused(self, loss_fn) -> None:
+        """Resolve the family's raw ``lomo_pieces`` exactly once; the same
+        object feeds the step-body builder (``pieces=`` argument) and the
+        memory accounting, so they can never disagree."""
+        self._fused = loss_fn is None and hasattr(self.model, "lomo_pieces")
+        self._pieces = None
+        if self._fused:
+            self._pieces = self.model.lomo_pieces(
+                self.cfg, compute_dtype=self.policy.compute_dtype)
+            if isinstance(self._pieces, LomoPieces):
+                # staged pieces may fuse at super-block grain (zamba2/
+                # xlstm): liveness_m consecutive units per fused grain
+                self.memory_m = self._pieces.liveness_m
+        self._step_fn: Optional[tuple[Callable, Any]] = None
+
+    def _step_shardings(self, example):
+        raise NotImplementedError
+
+    def _fn(self, example=None) -> tuple[Callable, Any]:
+        if self._step_fn is None:
+            donate = () if jax.devices()[0].platform == "cpu" \
+                else self._donate
+            if self.sharded and example is not None:
+                ins, outs = self._step_shardings(example)
+                self._step_fn = jax.jit(self._body, donate_argnums=donate,
+                                        in_shardings=ins,
+                                        out_shardings=outs), ins
+            else:
+                self._step_fn = jax.jit(self._body,
+                                        donate_argnums=donate), None
+        return self._step_fn
+
+    def peak_grad_params(self, params: PyTree) -> int:
+        if self._fused:
+            # per-grain liveness: the reverse scan holds one fused grain's
+            # grads (one unit for plain stacks; a super-block of
+            # memory_m = liveness_m units for zamba2/xlstm pieces)
+            units = self.model.unit_spec(self.cfg)
+            return max(tree_size(split_params(params, g)[0])
+                       for g in make_groups(units, self.memory_m))
+        # generic path: one top-level segment at a time (a stacked trunk's
+        # grad is a single array from the scan transpose)
+        return max(tree_size(sub) for sub in params.values())
+
+
 @register_strategy("lomo")
-class LOMOStrategy(Strategy):
+class LOMOStrategy(_FusedBackwardStrategy):
     """LOMO (Lv et al. 2023): full-parameter SGD with the update fused into
     the backward pass.  Numerically this IS one plain SGD step on all
     parameters — grads are taken at the pre-step params, clipped by global
@@ -1012,30 +1441,19 @@ class LOMOStrategy(Strategy):
                          loss_fn=loss_fn, mesh=mesh,
                          param_sharding_fn=param_sharding_fn)
         self.lomo = lomo if lomo is not None else LOMOConfig()
-        self._fused = loss_fn is None and hasattr(self.model, "lomo_pieces")
+        self._setup_fused(loss_fn)
         self._body = lomo_step_body(cfg, policy=self.policy, loss_fn=loss_fn,
-                                    lomo=self.lomo)
-        self._step_fn: Optional[tuple[Callable, Any]] = None
+                                    lomo=self.lomo, pieces=self._pieces)
 
     def init(self, params: PyTree, rng=None) -> TrainState:
         if self.policy.name in ("bf16",):
             params = tree_cast(params, self.policy.param_dtype)
         return TrainState(self.place_params(params), {}, 0, {})
 
-    def _fn(self, example=None) -> tuple[Callable, Any]:
-        if self._step_fn is None:
-            donate = () if jax.devices()[0].platform == "cpu" else (0,)
-            if self.sharded and example is not None:
-                ins, outs = dist_shardings.lomo_step_shardings(
-                    self.mesh, *example,
-                    param_shardings_tree=self.param_shardings(example[0]))
-                self._step_fn = jax.jit(self._body, donate_argnums=donate,
-                                        in_shardings=ins,
-                                        out_shardings=outs), ins
-            else:
-                self._step_fn = jax.jit(self._body,
-                                        donate_argnums=donate), None
-        return self._step_fn
+    def _step_shardings(self, example):
+        return dist_shardings.lomo_step_shardings(
+            self.mesh, *example,
+            param_shardings_tree=self.param_shardings(example[0]))
 
     def step(self, state: TrainState, batch) -> tuple[TrainState, Metrics]:
         step = int(state.step)
@@ -1050,15 +1468,78 @@ class LOMOStrategy(Strategy):
         return new_state, {"loss": loss, "lr": lr, "strategy": self.name,
                            "grad_norm": gnorm}
 
-    def peak_grad_params(self, params: PyTree) -> int:
-        if self._fused:
-            # per-unit liveness: the reverse scan holds one layer's grads
-            units = self.model.unit_spec(self.cfg)
-            return max(tree_size(split_params(params, g)[0])
-                       for g in make_groups(units, 1))
-        # generic path: one top-level segment at a time (a stacked trunk's
-        # grad is a single array from the scan transpose)
-        return max(tree_size(sub) for sub in params.values())
+
+# ---------------------------------------------------------------- AdaLomo
+
+@register_strategy("adalomo")
+class AdaLomoStrategy(_FusedBackwardStrategy):
+    """AdaLomo (Lv et al. 2023): LOMO's fused backward with Adafactor-grade
+    adaptivity.  Each reverse-scan iteration applies a factored second-moment
+    update (row/col statistics + RMS-scaled step, the exact leaf math of
+    ``repro.optim.adafactor``) to one layer the moment its gradient arrives —
+    so like ``lomo`` no full gradient tree is ever resident, but unlike
+    ``lomo`` the update is adaptive.  The price over LOMO's empty bundle is
+    the factored statistics: O(r+c) floats per (r, c) matrix, kept in
+    ``opt_state = {"moments", "count"}`` (``memory_model`` mode="adalomo"
+    prices them; for a 7B model they are ~MBs against AdamW's ~52 GB).
+
+    Families with ``lomo_pieces`` get the per-layer fused path (the moments
+    ride the reverse scan as per-layer slices); others take the segment-vjp
+    fallback — same arithmetic, coarser gradient liveness.  Segments whose
+    gradient accumulates across the sweep (embeddings, zamba2's shared
+    block) update once at the end: Adafactor is nonlinear in the gradient,
+    so LOMO's increment-splitting trick does not apply to them.
+
+    The optimizer argument is accepted for registry uniformity and ignored;
+    hyper-parameters live in :class:`AdaLomoConfig`."""
+
+    name = "adalomo"
+    memory_mode = "adalomo"
+    _donate = (0, 1)
+
+    def __init__(self, cfg, optimizer=None, *,
+                 adalomo: Optional[AdaLomoConfig] = None,
+                 schedule: Optional[LRSchedule] = None, policy: Policy = FP32,
+                 loss_fn: Optional[Callable] = None, mesh=None,
+                 param_sharding_fn: Optional[Callable] = None):
+        super().__init__(cfg, optimizer, schedule=schedule, policy=policy,
+                         loss_fn=loss_fn, mesh=mesh,
+                         param_sharding_fn=param_sharding_fn)
+        self.adalomo = adalomo if adalomo is not None else AdaLomoConfig()
+        self._setup_fused(loss_fn)
+        self._body = adalomo_step_body(cfg, policy=self.policy,
+                                       loss_fn=loss_fn, adalomo=self.adalomo,
+                                       pieces=self._pieces)
+
+    def init(self, params: PyTree, rng=None) -> TrainState:
+        if self.policy.name in ("bf16",):
+            params = tree_cast(params, self.policy.param_dtype)
+        params = self.place_params(params)
+        opt_state = adalomo_init_opt_state(self.cfg, params)
+        if self.sharded:
+            opt_state = jax.device_put(
+                opt_state, dist_shardings.param_shardings(opt_state,
+                                                          self.mesh))
+        return TrainState(params, opt_state, 0, {})
+
+    def _step_shardings(self, example):
+        return dist_shardings.adalomo_step_shardings(
+            self.mesh, *example,
+            param_shardings_tree=self.param_shardings(example[0]))
+
+    def step(self, state: TrainState, batch) -> tuple[TrainState, Metrics]:
+        step = int(state.step)
+        lr = self.schedule.at_cycle(step)
+        with self._trace_ctx():
+            fn, ins = self._fn((state.params, state.opt_state, batch))
+            args = (state.params, state.opt_state, batch)
+            if ins is not None:
+                args = jax.device_put(args, ins[:3])
+            params, opt_state, loss, gnorm = fn(*args,
+                                                jnp.asarray(lr, jnp.float32))
+        new_state = TrainState(params, opt_state, step + 1, state.extra)
+        return new_state, {"loss": loss, "lr": lr, "strategy": self.name,
+                           "grad_norm": gnorm}
 
 
 # ------------------------------------------------------------------ Runner

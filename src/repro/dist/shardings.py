@@ -220,3 +220,24 @@ def lomo_step_shardings(mesh, params: PyTree, batch: PyTree,
     p = param_shardings_tree if param_shardings_tree is not None \
         else param_shardings(params, mesh)
     return (p, batch_shardings(batch, mesh), scalar), (p, scalar, scalar)
+
+
+def adalomo_step_shardings(mesh, params: PyTree, opt_state: PyTree,
+                           batch: PyTree, param_shardings_tree: PyTree = None):
+    """``(in_shardings, out_shardings)`` for the AdaLomo fused-backward step
+    ``step(params, opt_state, batch, lr) -> (new_params, new_opt_state,
+    loss, grad_norm)``.
+
+    Params shard exactly as LOMO's (identical in/out specs: the whole tree
+    updates every step and is donated copy-free).  The factored second
+    moments in ``opt_state`` follow the structural param rule leaf-wise —
+    a ``vr`` row vector of a model-sharded matrix shards over ``model``
+    along its surviving dim when divisible, tiny vectors and the step count
+    replicate — again with identical in/out specs, so the moment buffers
+    donate in place."""
+    scalar = NamedSharding(mesh, P())
+    p = param_shardings_tree if param_shardings_tree is not None \
+        else param_shardings(params, mesh)
+    o = param_shardings(opt_state, mesh)
+    return ((p, o, batch_shardings(batch, mesh), scalar),
+            (p, o, scalar, scalar))

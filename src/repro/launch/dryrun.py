@@ -10,9 +10,11 @@ For each cell this proves, without real hardware:
   - the collective schedule is sane (parsed from the partitioned HLO).
 
 Train shapes lower the per-group HiFT step (the paper's technique);
-``--strategy fpft`` lowers the standard FPFT step for comparison and
-``--strategy lomo`` the fused-backward step (strategy names resolve through
-``repro.core.registry``).  Decode shapes lower ``serve_step`` (one token
+``--strategy fpft`` lowers the standard FPFT step for comparison,
+``--strategy lomo`` the fused-backward step and ``--strategy adalomo`` its
+Adafactor-grade variant with the factored moments threading the reverse
+scan (strategy names resolve through ``repro.core.registry``).  Decode
+shapes lower ``serve_step`` (one token
 against a seq_len KV cache); prefill shapes lower the prompt pass.
 
 Usage:
@@ -160,8 +162,9 @@ def lower_train_cell(cfg: ArchConfig, shape: ShapeConfig, mesh,
     ``fused_update`` lowers the optimizer update through the Pallas fused
     kernels instead of the unfused elementwise chain, proving the fused hot
     path partitions under GSPMD for the cell."""
-    if strategy not in ("hift", "fpft", "lomo"):
-        raise ValueError(f"dry-run lowers hift|fpft|lomo cells, got {strategy!r}")
+    if strategy not in ("hift", "fpft", "lomo", "adalomo"):
+        raise ValueError("dry-run lowers hift|fpft|lomo|adalomo cells, "
+                         f"got {strategy!r}")
     fpft = strategy == "fpft"
     model = get_family(cfg)
     params_s = _abstract_params(cfg)
@@ -187,6 +190,31 @@ def lower_train_cell(cfg: ArchConfig, shape: ShapeConfig, mesh,
         with mesh, activation_sharding(mesh, _daxes(mesh)):
             lowered = fn.lower(params_s, batch_s, lr_s)
         return lowered, {"mode": "lomo"}
+
+    if strategy == "adalomo":
+        # the adaptive fused-backward step: per-layer Adafactor updates
+        # inside the reverse scan, the factored second moments (vr/vc row
+        # and column vectors, the only resident optimizer state) threading
+        # through as scan slices.  Lowered with grad_clip=0 like the lomo
+        # cell (one reverse sweep).
+        from repro.core.strategy import (AdaLomoConfig, adalomo_init_opt_state,
+                                         adalomo_step_body)
+        from repro.optim.mixed_precision import BF16
+        step = adalomo_step_body(cfg, policy=BF16,
+                                 adalomo=AdaLomoConfig(grad_clip=0.0))
+        state_s = jax.eval_shape(lambda p: adalomo_init_opt_state(cfg, p),
+                                 params_s)
+        sshard = param_shardings(state_s, mesh)
+        state_bytes = sum(
+            math.prod(x.shape or (1,)) * jnp.dtype(x.dtype).itemsize
+            for x in jax.tree.leaves(state_s))
+        fn = jax.jit(step, in_shardings=(pshard, sshard, bshard, lr_shard),
+                     out_shardings=(pshard, sshard, NamedSharding(mesh, P()),
+                                    NamedSharding(mesh, P())))
+        with mesh, activation_sharding(mesh, _daxes(mesh)):
+            lowered = fn.lower(params_s, state_s, batch_s, lr_s)
+        return lowered, {"mode": "adalomo",
+                         "factored_state_bytes": int(state_bytes)}
 
     if fpft:
         def step(params, opt_state, batch, lr):
@@ -339,7 +367,7 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool = False,
 
     # analytic cost model
     if shape.kind == "train":
-        if meta.get("mode") == "lomo":
+        if meta.get("mode") in ("lomo", "adalomo"):
             # full backward, every layer's dW computed (then fused away)
             cost = costmodel.train_cost(cfg, shape, cut=None,
                                         active_layers=cfg.n_layers,
@@ -424,7 +452,7 @@ def main():
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--strategy", default="hift",
-                    choices=["hift", "fpft", "lomo"],
+                    choices=["hift", "fpft", "lomo", "adalomo"],
                     help="which train step to lower for train cells")
     ap.add_argument("--fused-update", action="store_true",
                     help="lower the optimizer update through the fused "

@@ -4,7 +4,7 @@
         --steps 20 --strategy hift --m 2 --order bottom2up --optimizer adamw
 
 Selects any assigned architecture (--arch) and any registered fine-tuning
-strategy (--strategy hift|fpft|mezo|lisa|lomo, resolved via
+strategy (--strategy hift|fpft|mezo|lisa|lomo|adalomo|..., resolved via
 ``repro.core.registry``), wires the deterministic data pipeline,
 checkpointing and the straggler watchdog.  On a real TPU cluster this same
 entry point runs per-host under the (data, model) mesh; ``--mesh DxM``
@@ -25,8 +25,8 @@ import argparse
 import jax
 
 from repro.configs.registry import ARCH_IDS, PAPER_IDS, get_config
-from repro.core import (HiFTConfig, LiSAConfig, LOMOConfig, LRSchedule,
-                        MeZOConfig, make_runner, registry)
+from repro.core import (AdaLomoConfig, HiFTConfig, LiSAConfig, LOMOConfig,
+                        LRSchedule, MeZOConfig, make_runner, registry)
 from repro.data.synthetic import DataConfig, PrefetchIterator, SyntheticLM
 from repro.models import get_family
 from repro.optim.mixed_precision import get_policy
@@ -53,8 +53,10 @@ def main(argv=None):
                     help="HiFT group visit order")
     ap.add_argument("--switch-every", type=int, default=5,
                     help="LiSA re-sampling period")
-    ap.add_argument("--grad-clip", type=float, default=1.0,
-                    help="LOMO global-norm clip (0 disables the norm sweep)")
+    ap.add_argument("--grad-clip", type=float, default=None,
+                    help="lomo/adalomo global-norm clip (0 disables the norm "
+                         "sweep; default 1.0 for lomo, 0 for adalomo whose "
+                         "per-matrix update-RMS clip already bounds steps)")
     ap.add_argument("--fused-update", dest="fused_update",
                     action="store_true", default=None,
                     help="force the fused Pallas optimizer update "
@@ -108,7 +110,11 @@ def main(argv=None):
     elif strategy == "mezo":
         kw["mezo"] = MeZOConfig(seed=args.seed)
     elif strategy == "lomo":
-        kw["lomo"] = LOMOConfig(grad_clip=args.grad_clip)
+        kw["lomo"] = LOMOConfig(
+            grad_clip=1.0 if args.grad_clip is None else args.grad_clip)
+    elif strategy == "adalomo":
+        kw["adalomo"] = AdaLomoConfig(
+            grad_clip=0.0 if args.grad_clip is None else args.grad_clip)
     runner = make_runner(cfg, strategy, params=params,
                          optimizer=args.optimizer, seed=args.seed, **kw)
     if strategy in ("hift", "hift_pipelined", "lisa"):

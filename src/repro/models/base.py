@@ -90,3 +90,87 @@ def init_stacked(init_one: Callable[[jax.Array], PyTree], key, n: int) -> PyTree
     """Initialize n layers and stack leaves along axis 0."""
     keys = jax.random.split(key, n)
     return jax.vmap(init_one)(keys)
+
+
+# ---------------------------------------------------- fused-backward pieces
+
+@dataclasses.dataclass(frozen=True)
+class LomoPieces:
+    """Segmented forward contract for the fused-backward strategies
+    (``lomo`` / ``adalomo`` in ``repro.core.strategy``).
+
+    A family that exposes ``lomo_pieces(cfg, compute_dtype) -> LomoPieces``
+    gets the per-layer fused path: the strategy runs each stage's forward as
+    a ``lax.scan`` saving only layer INPUTS, then a hand-rolled reverse scan
+    whose body re-runs one layer under ``jax.vjp`` and consumes its gradient
+    (SGD- or Adafactor-updates it) in-iteration — no full gradient tree is
+    ever resident.  Families without pieces take the coarser segment-vjp
+    fallback.  The pieces must reproduce the family's ``loss_fn`` exactly
+    (same ops, same constraints), i.e. for every ``params``/``batch``:
+
+    ```python
+    ep, stages, sp, hp = pieces.split(params)
+    h, side = pieces.stage_inits[0](ep, None, batch)
+    for i, key in enumerate(pieces.stage_keys):
+        if i > 0:
+            h, side = pieces.stage_inits[i](ep, h, batch)
+        for layer_p in iter_layers(stages[i]):          # leading-dim slices
+            h = pieces.stage_fns[i](layer_p, sp, side, h)
+    loss = pieces.head_loss_fn(hp, ep, h, batch)        # == loss_fn(...)
+    ```
+
+    Fields:
+
+    - ``stage_keys``: names (forward order) of the scanned trunk stages —
+      one for single-stack families, ``("enc", "dec")`` for encdec.
+    - ``stage_fns[i]``: ``block(layer_p, shared_p, side, h) -> h`` for one
+      layer (or super-block) of stage i.  ``shared_p`` is the segment reused
+      by EVERY block (zamba2's shared attention; None otherwise) — its
+      gradient accumulates across the reverse scan and is applied once.
+      ``side`` is a per-stage constant activation (encdec's encoder memory;
+      None otherwise) whose cotangent likewise accumulates.
+    - ``stage_inits[i]``: ``(embed_p, prev_stage_out, batch) -> (h0, side)``
+      — builds stage i's initial carry + side input.  ``prev_stage_out`` is
+      None for stage 0.  Gradients w.r.t. ``embed_p`` from every init (and
+      from ``head_loss_fn``, for tied embeddings) sum into one embedding
+      update; the cotangent handed back for ``prev_stage_out`` seeds the
+      previous stage's reverse scan.
+    - ``head_loss_fn``: ``(head_p, embed_p, h_final, batch) -> loss``.
+    - ``split``: ``params -> (embed_p, stages, shared_p, head_p)`` where
+      ``stages`` is a tuple of stacked layer trees (leading dim = #blocks).
+      MUST only restructure LEADING dims (reshape/slice via ``jax.tree.map``)
+      so it applies verbatim to the param-shaped optimizer-moment tree that
+      AdaLomo threads through the same scans.
+    - ``merge``: inverse of ``split``.
+    - ``liveness_m``: consecutive ``unit_spec`` units whose gradients are
+      simultaneously live in one fused grain (zamba2/xlstm super-blocks:
+      ``attn_every`` / ``slstm_every``; plain layers: 1) — feeds the
+      strategies' ``peak_grad_params`` and ``memory_model`` accounting.
+    """
+    stage_keys: tuple
+    stage_fns: tuple
+    stage_inits: tuple
+    head_loss_fn: Callable
+    split: Callable
+    merge: Callable
+    shared_key: Optional[str] = None
+    liveness_m: int = 1
+
+    @classmethod
+    def from_embed_block_head(cls, embed_fn: Callable, block_fn: Callable,
+                              head_loss_fn: Callable) -> "LomoPieces":
+        """Adapt the legacy 3-tuple contract (``transformer.lomo_pieces``:
+        ``embed_fn(embed_p, batch)``, ``block_fn(layer_p, h)``,
+        ``head_loss_fn(head_p, embed_p, h, batch)``) over a
+        ``{"embed", "layers", "head"}`` tree to the staged protocol."""
+        return cls(
+            stage_keys=("layers",),
+            stage_fns=(lambda lp, sp, side, h: block_fn(lp, h),),
+            stage_inits=(lambda ep, prev, batch: (embed_fn(ep, batch), None),),
+            head_loss_fn=head_loss_fn,
+            split=lambda params: (params["embed"], (params["layers"],), None,
+                                  params["head"]),
+            merge=lambda ep, stages, sp, hp: {"embed": ep,
+                                              "layers": stages[0],
+                                              "head": hp},
+        )

@@ -183,6 +183,71 @@ def loss_fn(cfg: ArchConfig, params: PyTree, batch, cut: Optional[int] = None,
                                    chunk=cfg.ce_chunk or None)
 
 
+def lomo_pieces(cfg: ArchConfig, compute_dtype=jnp.bfloat16):
+    """Segmented forward for the fused-backward strategies.
+
+    Two stages — the encoder stack then the decoder stack — chained through
+    ``stage_inits``: the decoder's init re-embeds the target tokens and
+    hands the encoder output over as the stage's ``side`` input, so every
+    decoder layer's cross-attention reads it WITHOUT it being saved
+    per-layer in the scan residuals.  In the backward, each decoder layer's
+    cross-attention cotangent accumulates into ``d(side)``; when the decoder
+    sweep finishes, that accumulated cotangent seeds the encoder's reverse
+    scan — cross-attention aware end to end.  The embedding segment collects
+    gradient from both inits (``src_proj`` from the encoder's, ``tok`` from
+    the decoder's — disjoint leaves, summed exactly)."""
+    from repro.models.base import LomoPieces
+    from repro.models.losses import chunked_next_token_xent
+
+    def enc_init(embed_p, prev, batch):
+        del prev
+        h = batch["src_embeds"].astype(compute_dtype) \
+            @ embed_p["src_proj"].astype(compute_dtype)
+        return constrain_layer_io(h), None
+
+    def enc_block(layer_p, shared_p, side, h):
+        del shared_p, side
+        cos, sin = L.rope_frequencies(cfg.head_dim, h.shape[1], cfg.rope_theta)
+        h = h + _bidir_attention(layer_p["attn"], L.layernorm(layer_p["ln1"], h),
+                                 cfg, cos, sin)
+        h = h + L.gelu_mlp(layer_p["mlp"], L.layernorm(layer_p["ln2"], h))
+        return constrain_layer_io(h)
+
+    def dec_init(embed_p, memory, batch):
+        h = embed_p["tok"][batch["tokens"]].astype(compute_dtype)
+        return constrain_layer_io(h), memory
+
+    def dec_block(layer_p, shared_p, memory, h):
+        del shared_p
+        cos, sin = L.rope_frequencies(cfg.head_dim, h.shape[1], cfg.rope_theta)
+        h = h + L.gqa_attention(layer_p["self_attn"],
+                                L.layernorm(layer_p["ln1"], h), cfg, cos, sin,
+                                impl=cfg.attention_impl,
+                                balanced=cfg.attention_balanced)
+        h = h + _cross_attention(layer_p["cross_attn"],
+                                 L.layernorm(layer_p["ln_x"], h), memory, cfg)
+        h = h + L.gelu_mlp(layer_p["mlp"], L.layernorm(layer_p["ln2"], h))
+        return constrain_layer_io(h)
+
+    def head_loss(head_p, embed_p, h, batch):
+        del embed_p  # untied head
+        h = L.layernorm(head_p["final_norm"], h)
+        return chunked_next_token_xent(h, head_p["w"], batch["labels"],
+                                       chunk=cfg.ce_chunk or None)
+
+    return LomoPieces(
+        stage_keys=("enc", "dec"),
+        stage_fns=(enc_block, dec_block),
+        stage_inits=(enc_init, dec_init),
+        head_loss_fn=head_loss,
+        split=lambda params: (params["embed"],
+                              (params["enc"], params["dec"]), None,
+                              params["head"]),
+        merge=lambda ep, stages, sp, hp: {"embed": ep, "enc": stages[0],
+                                          "dec": stages[1], "head": hp},
+    )
+
+
 # ---------------------------------------------------------------- serving
 
 def init_cache(cfg: ArchConfig, batch: int, max_len: int, enc_len: int,

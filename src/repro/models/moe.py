@@ -290,6 +290,46 @@ def loss_fn(cfg: ArchConfig, params: PyTree, batch, cut: Optional[int] = None,
                                    chunk=cfg.ce_chunk or None)
 
 
+def lomo_pieces(cfg: ArchConfig, compute_dtype=jnp.bfloat16):
+    """Segmented forward for the fused-backward strategies.
+
+    One MoE layer — router + experts (+ shared experts / dense residual) —
+    is one piece: its whole gradient is consumed inside one reverse-scan
+    iteration, and ``moe_ffn_auto`` keeps riding the shard_map
+    expert-parallel path when a sharding context is active (the vjp of a
+    shard_map is itself a shard_map, so the backward all-to-alls stay
+    per-device sized)."""
+    from repro.models.base import LomoPieces
+    from repro.models.losses import chunked_next_token_xent
+
+    def embed_init(embed_p, prev, batch):
+        del prev
+        h = embed_p["tok"][batch["tokens"]].astype(compute_dtype)
+        return constrain_layer_io(h), None
+
+    def block(layer_p, shared_p, side, h):
+        del shared_p, side
+        cos, sin = L.rope_frequencies(cfg.head_dim, h.shape[1], cfg.rope_theta)
+        return constrain_layer_io(_block(cfg, cos, sin)(h, layer_p))
+
+    def head_loss(head_p, embed_p, h, batch):
+        del embed_p  # untied head
+        h = L.rmsnorm(head_p["final_norm"], h)
+        return chunked_next_token_xent(h, head_p["w"], batch["labels"],
+                                       chunk=cfg.ce_chunk or None)
+
+    return LomoPieces(
+        stage_keys=("layers",),
+        stage_fns=(block,),
+        stage_inits=(embed_init,),
+        head_loss_fn=head_loss,
+        split=lambda params: (params["embed"], (params["layers"],), None,
+                              params["head"]),
+        merge=lambda ep, stages, sp, hp: {"embed": ep, "layers": stages[0],
+                                          "head": hp},
+    )
+
+
 # ---------------------------------------------------------------- serving
 
 def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16):

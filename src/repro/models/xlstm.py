@@ -286,6 +286,65 @@ def loss_fn(cfg: ArchConfig, params: PyTree, batch, cut: Optional[int] = None,
                                    chunk=cfg.ce_chunk or None)
 
 
+def lomo_pieces(cfg: ArchConfig, compute_dtype=jnp.bfloat16):
+    """Segmented forward for the fused-backward strategies.
+
+    The fused grain is one SUPER-BLOCK ((slstm_every-1) mLSTM blocks + one
+    sLSTM block), matching ``apply``'s scan structure: the two stacked
+    segments interleave at that period, so the per-grain layer slice is the
+    zipped tree ``{"mlstm": (m_per, ...), "slstm": (...)}`` and
+    ``liveness_m = slstm_every``.  ``split``/``merge`` only reshape leading
+    dims, so AdaLomo's moment tree restructures through them unchanged."""
+    from repro.models.base import LomoPieces
+    from repro.models.losses import chunked_next_token_xent
+    n_sb = _n_sb(cfg)
+    m_per = cfg.slstm_every - 1
+
+    def embed_init(embed_p, prev, batch):
+        del prev
+        h = embed_p["tok"][batch["tokens"]].astype(compute_dtype)
+        return constrain_layer_io(h), None
+
+    def block(sb_p, shared_p, side, h):
+        del shared_p, side
+
+        def inner(carry, p_layer):
+            return mlstm_forward(p_layer, carry, cfg), None
+
+        h, _ = jax.lax.scan(inner, h, sb_p["mlstm"])
+        h, _ = slstm_forward(sb_p["slstm"], h, cfg)
+        return constrain_layer_io(h)
+
+    def head_loss(head_p, embed_p, h, batch):
+        del embed_p  # untied head
+        h = L.rmsnorm(head_p["final_norm"], h)
+        return chunked_next_token_xent(h, head_p["w"], batch["labels"],
+                                       chunk=cfg.ce_chunk or None)
+
+    def split(params):
+        m_sb = jax.tree.map(
+            lambda x: x.reshape((n_sb, m_per) + x.shape[1:]), params["mlstm"])
+        return (params["embed"], ({"mlstm": m_sb, "slstm": params["slstm"]},),
+                None, params["head"])
+
+    def merge(ep, stages, sp, hp):
+        mlstm = jax.tree.map(
+            lambda x: x.reshape((x.shape[0] * x.shape[1],) + x.shape[2:]),
+            stages[0]["mlstm"])
+        return {"embed": ep, "mlstm": mlstm, "slstm": stages[0]["slstm"],
+                "head": hp}
+
+    return LomoPieces(
+        stage_keys=("blocks",),
+        stage_fns=(block,),
+        stage_inits=(embed_init,),
+        head_loss_fn=head_loss,
+        split=split,
+        merge=merge,
+        liveness_m=cfg.slstm_every,
+    )
+
+
 # ---------------------------------------------------------------- serving
 
 def init_cache(cfg: ArchConfig, batch: int, max_len: int = 0, dtype=jnp.bfloat16):

@@ -130,6 +130,72 @@ def loss_fn(cfg: ArchConfig, params: PyTree, batch, cut: Optional[int] = None,
                                    chunk=cfg.ce_chunk or None)
 
 
+def lomo_pieces(cfg: ArchConfig, compute_dtype=jnp.bfloat16):
+    """Segmented forward for the fused-backward strategies.
+
+    The fused grain is one SUPER-BLOCK (``attn_every`` mamba layers + one
+    application of the shared attention block), because the shared block's
+    weights are reused inside every super-block — so ``liveness_m =
+    attn_every``.  The shared segment itself rides the strategies'
+    ``shared_p`` slot: each reverse-scan iteration contributes its
+    application's gradient, the strategy accumulates them across the sweep
+    and applies ONE update (exactly the summed gradient a plain backward
+    would produce for reused weights)."""
+    from repro.models.base import LomoPieces
+    from repro.models.losses import chunked_next_token_xent
+    n_sb = cfg.n_layers // cfg.attn_every
+
+    def embed_init(embed_p, prev, batch):
+        del prev
+        h = embed_p["tok"][batch["tokens"]].astype(compute_dtype)
+        return constrain_layer_io(h), None
+
+    def block(sb_p, shared, side, h):
+        del side
+        cos, sin = L.rope_frequencies(cfg.head_dim, h.shape[1], cfg.rope_theta)
+
+        def mamba_step(hh, p):
+            return hh + M.mamba2_forward(p["mamba"], L.rmsnorm(p["ln"], hh),
+                                         cfg), None
+
+        h, _ = jax.lax.scan(mamba_step, h, sb_p)
+        hn = L.rmsnorm(shared["ln1"], h)
+        h = h + L.gqa_attention(shared["attn"], hn, cfg, cos, sin,
+                                impl=cfg.attention_impl,
+                                balanced=cfg.attention_balanced)
+        h = h + L.swiglu(shared["mlp"], L.rmsnorm(shared["ln2"], h))
+        return constrain_layer_io(h)
+
+    def head_loss(head_p, embed_p, h, batch):
+        del embed_p  # untied head
+        h = L.rmsnorm(head_p["final_norm"], h)
+        return chunked_next_token_xent(h, head_p["w"], batch["labels"],
+                                       chunk=cfg.ce_chunk or None)
+
+    def split(params):
+        sb = jax.tree.map(
+            lambda x: x.reshape((n_sb, cfg.attn_every) + x.shape[1:]),
+            params["layers"])
+        return params["embed"], (sb,), params["shared"], params["head"]
+
+    def merge(ep, stages, sp, hp):
+        layers = jax.tree.map(
+            lambda x: x.reshape((x.shape[0] * x.shape[1],) + x.shape[2:]),
+            stages[0])
+        return {"embed": ep, "layers": layers, "shared": sp, "head": hp}
+
+    return LomoPieces(
+        stage_keys=("layers",),
+        stage_fns=(block,),
+        stage_inits=(embed_init,),
+        head_loss_fn=head_loss,
+        split=split,
+        merge=merge,
+        shared_key="shared",
+        liveness_m=cfg.attn_every,
+    )
+
+
 # ---------------------------------------------------------------- serving
 
 def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16):

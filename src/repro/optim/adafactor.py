@@ -16,20 +16,77 @@ def _factored(shape) -> bool:
     return len(shape) >= 2
 
 
+def beta2_at(count, decay_rate: float = 0.8) -> jnp.ndarray:
+    """Adafactor's step-dependent decay ``1 - t^-decay_rate`` for 1-based
+    ``count`` (shared with the AdaLomo fused-backward strategy, whose
+    per-layer updates inside the reverse scan must use the same schedule)."""
+    return 1.0 - jnp.asarray(count).astype(jnp.float32) ** (-decay_rate)
+
+
+def moment_init(p, stacked: bool = False):
+    """Second-moment slot for ONE param leaf: factored row/col vectors
+    (``{"vr", "vc"}``, r+c floats per matrix) when the leaf is a matrix, a
+    full ``{"v"}`` buffer otherwise.
+
+    ``stacked=True`` declares the leading dim a LAYER STACK (this repo's
+    scanned ``(n_layers, ...)`` segments): the factoring decision is then
+    made on the per-layer shape, so a stacked bias ``(L, d)`` gets a full
+    per-layer ``v`` instead of being spuriously factored ACROSS layers, and
+    a stacked matrix ``(L, r, c)`` gets per-layer ``vr (L, r)`` /
+    ``vc (L, c)``.  This is the layout the AdaLomo strategy keeps resident;
+    :func:`leaf_update` treats every leading dim beyond the factored matrix
+    as batch, so the same slot works whole (fallback path) or sliced
+    layer-by-layer inside a reverse scan (fused path)."""
+    shape = p.shape[1:] if stacked else p.shape
+    if _factored(shape):
+        return {
+            "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+            "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+        }
+    return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+
+def leaf_update(p, g, mom, lr, beta2, *, eps1: float = 1e-30,
+                clip_threshold: float = 1.0, weight_decay: float = 0.0,
+                matrix_rms: bool = False):
+    """One Adafactor update on one leaf -> ``(new_p, new_mom)``.
+
+    Dispatches on the MOMENT structure (``vr``/``vc`` = factored over the
+    last two dims, ``v`` = full), so the factoring policy lives entirely in
+    :func:`moment_init`.  ``matrix_rms=True`` computes the update-RMS clip
+    per trailing matrix (per layer, when leading dims are a stack) instead
+    of over the whole leaf — the semantics the AdaLomo strategy needs so its
+    fused per-layer path and its whole-segment fallback agree exactly; the
+    classic :func:`adafactor` optimizer keeps the whole-leaf RMS."""
+    g32 = g.astype(jnp.float32)
+    gsq = jnp.square(g32) + eps1
+    if "vr" in mom:
+        vr = beta2 * mom["vr"] + (1 - beta2) * jnp.mean(gsq, axis=-1)
+        vc = beta2 * mom["vc"] + (1 - beta2) * jnp.mean(gsq, axis=-2)
+        denom = jnp.mean(vr, axis=-1, keepdims=True)
+        # rank-1 approximation of the second moment: vr/denom (x) vc
+        u = g32 / (jnp.sqrt(vr / denom)[..., None]
+                   * jnp.sqrt(jnp.expand_dims(vc, -2)))
+        new_mom = {"vr": vr, "vc": vc}
+        rms_axes = (-2, -1) if matrix_rms else None
+    else:
+        v = beta2 * mom["v"] + (1 - beta2) * gsq
+        u = g32 / jnp.sqrt(v)
+        new_mom = {"v": v}
+        rms_axes = (-1,) if (matrix_rms and g.ndim >= 1) else None
+    rms_u = jnp.sqrt(jnp.mean(jnp.square(u), axis=rms_axes,
+                              keepdims=rms_axes is not None) + 1e-12)
+    u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+    step = lr * (u + weight_decay * p.astype(jnp.float32))
+    return (p.astype(jnp.float32) - step).astype(p.dtype), new_mom
+
+
 def adafactor(eps1: float = 1e-30, eps2: float = 1e-3,
               clip_threshold: float = 1.0, weight_decay: float = 0.0,
               grad_clip: float = 0.0, decay_rate: float = 0.8) -> Optimizer:
     def init(params):
-        def make(p):
-            if _factored(p.shape):
-                return {
-                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
-                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
-                }
-            return {"v": jnp.zeros(p.shape, jnp.float32)}
-
         return {
-            "moments": jax.tree.map(make, params),
+            "moments": jax.tree.map(moment_init, params),
             "count": jnp.zeros((), jnp.int32),
         }
 
@@ -40,24 +97,9 @@ def adafactor(eps1: float = 1e-30, eps2: float = 1e-3,
         beta2 = 1.0 - t ** (-decay_rate)
 
         def upd(p, g, mom):
-            g32 = g.astype(jnp.float32)
-            gsq = jnp.square(g32) + eps1
-            if _factored(p.shape):
-                vr = beta2 * mom["vr"] + (1 - beta2) * jnp.mean(gsq, axis=-1)
-                vc = beta2 * mom["vc"] + (1 - beta2) * jnp.mean(gsq, axis=-2)
-                denom = jnp.mean(vr, axis=-1, keepdims=True)
-                # rank-1 approximation of the second moment: vr/denom (x) vc
-                u = g32 / (jnp.sqrt(vr / denom)[..., None]
-                           * jnp.sqrt(jnp.expand_dims(vc, -2)))
-                new_mom = {"vr": vr, "vc": vc}
-            else:
-                v = beta2 * mom["v"] + (1 - beta2) * gsq
-                u = g32 / jnp.sqrt(v)
-                new_mom = {"v": v}
-            rms_u = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
-            u = u / jnp.maximum(1.0, rms_u / clip_threshold)
-            step = lr * (u + weight_decay * p.astype(jnp.float32))
-            return (p.astype(jnp.float32) - step).astype(p.dtype), new_mom
+            return leaf_update(p, g, mom, lr, beta2, eps1=eps1,
+                               clip_threshold=clip_threshold,
+                               weight_decay=weight_decay)
 
         flat_p, treedef = jax.tree.flatten(params)
         flat_g = treedef.flatten_up_to(grads)

@@ -126,6 +126,12 @@ def main():
     out["lomo"] = compare(cfg, params, batch, mesh, "lomo", 3,
                           schedule=LRSchedule(1e-2))
 
+    # AdaLomo: the factored-moment update divides by sqrt(v) — like adamw,
+    # near-zero second moments amplify reduction-order noise, so params get
+    # the looser bound in the assertions while losses stay tight.
+    out["adalomo"] = compare(cfg, params, batch, mesh, "adalomo", 3,
+                             schedule=LRSchedule(1e-3))
+
     out["ckpt"] = checkpoint_roundtrip(cfg, params, batch, mesh)
     print(json.dumps(out))
 

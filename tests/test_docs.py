@@ -33,3 +33,41 @@ def test_checker_catches_problems(tmp_path):
     assert len(problems) == 2
     assert any("dead link" in p for p in problems)
     assert any("does not compile" in p for p in problems)
+
+
+def test_scanner_matches_live_registry():
+    """The no-deps decorator scan (what the CI docs job runs) must agree
+    with the imported registry — a strategy registered without the
+    decorator (or vice versa) would silently skip the drift check."""
+    from repro.core.registry import strategy_ids
+    assert _load_checker().registry_names(_REPO) == strategy_ids()
+
+
+def _drift_tree(tmp_path, readme_table):
+    src = tmp_path / "src" / "repro"
+    src.mkdir(parents=True)
+    (src / "s.py").write_text(
+        '@register_strategy("alpha")\nclass A: pass\n'
+        '@register_strategy("beta")\nclass B: pass\n')
+    (tmp_path / "README.md").write_text(readme_table)
+    return tmp_path
+
+
+def test_checker_catches_strategy_table_drift(tmp_path):
+    """Missing registry entry, stale table row, and wrong prose count all
+    fail; the in-sync version passes."""
+    checker = _load_checker()
+    bad = _drift_tree(
+        tmp_path, "One fine-tuning strategies ship.\n\n"
+                  "| strategy | x |\n|---|---|\n"
+                  "| `alpha` | . |\n| `gone` | . |\n")
+    problems = checker.check(bad)
+    assert any("`beta` missing" in p for p in problems), problems
+    assert any("`gone`" in p and "not in the registry" in p
+               for p in problems), problems
+    assert any("registry has 2" in p for p in problems), problems
+
+    (tmp_path / "README.md").write_text(
+        "Two fine-tuning strategies ship.\n\n"
+        "| strategy | x |\n|---|---|\n| `alpha` | . |\n| `beta` | . |\n")
+    assert checker.check(tmp_path) == []

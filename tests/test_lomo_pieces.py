@@ -1,0 +1,195 @@
+"""Family-specific ``lomo_pieces`` + AdaLomo: every model family rides the
+fused-backward path, and the fused path is the SAME arithmetic as the
+generic segment-vjp fallback.
+
+- pieces-vs-fallback equivalence per family (moe / hybrid / xlstm /
+  encdec), for both ``lomo`` and ``adalomo``: a custom ``loss_fn`` forces
+  the fallback, and losses + params must agree to float rounding.  For
+  adalomo the param comparison is masked to coordinates with non-tiny
+  gradients: the RMS-normalized update is ~sign(g) while the second
+  moments are empty, so a float-rounding sign flip at g ~ 0 legitimately
+  moves a parameter by 2*lr in opposite directions on the two paths (the
+  moments themselves, which see g^2, must still match tightly).
+- the smoke-size registry configs of all four families actually take the
+  pieces path (``strategy._fused``), not the fallback;
+- AdaLomo's resident state is the factored O(r+c) statistics;
+- super-block pieces (hybrid/xlstm) declare their fused grain
+  (``liveness_m``) and the memory model agrees with the strategy.
+"""
+import jax
+import numpy as np
+import pytest
+
+from conftest import tiny_dense_cfg
+from repro.common.pytree import flatten_with_paths, tree_size
+from repro.configs.base import ArchConfig
+from repro.core import LRSchedule, lomo_pieces_of, make_runner
+from repro.core.memory_model import analyze
+from repro.models import get_family
+from repro.models.base import LomoPieces
+
+FAMILIES = ["moe", "hybrid", "xlstm", "encdec"]
+
+
+def tiny_cfg(family):
+    base = dict(name=f"tiny-{family}", family=family, n_layers=4, d_model=32,
+                n_heads=4, kv_heads=2, d_ff=64, vocab=128,
+                block_q=16, block_k=16, ce_chunk=0)
+    per_family = {
+        "moe": dict(n_experts=4, top_k=2, moe_d_ff=32, capacity_factor=2.0),
+        "hybrid": dict(kv_heads=4, head_dim=8, ssm_state=8, ssm_heads=4,
+                       ssm_head_dim=8, attn_every=2),
+        "xlstm": dict(slstm_every=2, kv_heads=4),
+        "encdec": dict(enc_layers=2, dec_layers=2, kv_heads=4,
+                       norm="layernorm", mlp="gelu"),
+    }
+    base.update(per_family[family])
+    return ArchConfig(**base)
+
+
+def make_batch(cfg, batch=2, seq=16, seed=0):
+    k = jax.random.PRNGKey(seed)
+    t = jax.random.randint(k, (batch, seq), 0, cfg.vocab)
+    out = {"tokens": t, "labels": t}
+    if cfg.family == "encdec":
+        out["src_embeds"] = jax.random.normal(k, (batch, seq, cfg.d_model))
+    return out
+
+
+def _runners(cfg, strategy, params, lr=1e-2):
+    model = get_family(cfg)
+    fused = make_runner(cfg, strategy, params=params,
+                        schedule=LRSchedule(lr))
+    generic = make_runner(cfg, strategy, params=params,
+                          schedule=LRSchedule(lr), loss_fn=model.loss_fn)
+    assert fused.strategy._fused, (cfg.family, strategy)
+    assert not generic.strategy._fused, (cfg.family, strategy)
+    return fused, generic
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_lomo_pieces_match_generic_fallback(family):
+    cfg = tiny_cfg(family)
+    params = get_family(cfg).init(cfg, jax.random.PRNGKey(0))
+    batch = make_batch(cfg)
+    fused, generic = _runners(cfg, "lomo", params)
+    for _ in range(2):
+        np.testing.assert_allclose(float(fused.train_step(batch)),
+                                   float(generic.train_step(batch)),
+                                   atol=2e-5)
+    for a, b in zip(jax.tree.leaves(fused.params),
+                    jax.tree.leaves(generic.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_adalomo_pieces_match_generic_fallback(family):
+    cfg = tiny_cfg(family)
+    model = get_family(cfg)
+    params = model.init(cfg, jax.random.PRNGKey(0))
+    batch = make_batch(cfg)
+    # reference gradient at the starting point: the masked param comparison
+    # skips coordinates where |g| is at rounding scale (see module docs)
+    grads = jax.grad(lambda p: model.loss_fn(cfg, p, batch,
+                                             compute_dtype=jax.numpy.float32)
+                     )(params)
+    fused, generic = _runners(cfg, "adalomo", params, lr=1e-2)
+    np.testing.assert_allclose(float(fused.train_step(batch)),
+                               float(generic.train_step(batch)), atol=2e-5)
+    fp = flatten_with_paths(fused.params)
+    gp = flatten_with_paths(generic.params)
+    gr = flatten_with_paths(grads)
+    for path in fp:
+        mask = np.abs(np.asarray(gr[path])) > 1e-4
+        np.testing.assert_allclose(np.asarray(fp[path])[mask],
+                                   np.asarray(gp[path])[mask],
+                                   atol=1e-5, err_msg=path)
+    # the factored moments see g^2 (sign-free): they must agree everywhere
+    fm = flatten_with_paths(fused.state.opt_state)
+    gm = flatten_with_paths(generic.state.opt_state)
+    assert set(fm) == set(gm)
+    for path in fm:
+        np.testing.assert_allclose(np.asarray(fm[path]), np.asarray(gm[path]),
+                                   atol=1e-5, err_msg=path)
+
+
+@pytest.mark.parametrize("arch_id", ["deepseek_moe_16b", "zamba2_2_7b",
+                                     "xlstm_1_3b", "seamless_m4t_large_v2"])
+@pytest.mark.parametrize("strategy", ["lomo", "adalomo"])
+def test_smoke_configs_take_pieces_path(arch_id, strategy):
+    """The acceptance bar: every family's smoke-size registry config rides
+    family-specific pieces, not the segment-vjp fallback."""
+    from repro.configs.registry import get_config
+    cfg = get_config(arch_id, smoke=True)
+    r = make_runner(cfg, strategy, seed=0, schedule=LRSchedule(1e-3))
+    assert r.strategy._fused, (arch_id, strategy)
+    pieces = lomo_pieces_of(cfg)
+    assert isinstance(pieces, LomoPieces), arch_id
+
+
+def test_adalomo_state_is_factored():
+    cfg = tiny_dense_cfg(ce_chunk=0)
+    r = make_runner(cfg, "adalomo", seed=0, schedule=LRSchedule(1e-3))
+    mom = r.state.opt_state["moments"]
+    tok = mom["embed"]["tok"]                       # (vocab_padded, d) matrix
+    assert set(tok) == {"vr", "vc"}
+    assert tok["vr"].shape == (cfg.vocab_padded,)
+    assert tok["vc"].shape == (cfg.d_model,)
+    wq = mom["layers"]["attn"]["wq"]                # stacked: per-layer vr/vc
+    assert wq["vr"].shape[0] == cfg.n_layers
+    # a stacked vector (rmsnorm scale) keeps a FULL per-layer v — factoring
+    # across layers would mix unrelated statistics
+    assert set(mom["layers"]["ln1"]["scale"]) == {"v"}
+    # the whole point: state is sub-linear in the param count
+    assert tree_size(mom) < 0.05 * tree_size(r.params)
+    assert int(r.state.opt_state["count"]) == 0
+
+
+def test_adalomo_reduces_loss_and_reports_gnorm():
+    cfg = tiny_dense_cfg(ce_chunk=0)
+    r = make_runner(cfg, "adalomo", seed=0, schedule=LRSchedule(5e-3))
+    batch = make_batch(cfg, batch=4, seq=32)
+    losses = [float(r.train_step(batch)) for _ in range(20)]
+    assert np.isfinite(losses).all()
+    assert losses[-1] < losses[0] * 0.7, (losses[0], losses[-1])
+    assert np.isfinite(float(r.last_metrics["grad_norm"]))
+    assert r.strategy.peak_grad_params(r.params) < r.total_params()
+
+
+def test_adalomo_grad_clip_runs_two_sweeps():
+    """grad_clip > 0 adds the norm-only sweep; with a clip far above the
+    actual norm the update must be unchanged."""
+    from repro.core import AdaLomoConfig
+    cfg = tiny_dense_cfg(ce_chunk=0)
+    params = get_family(cfg).init(cfg, jax.random.PRNGKey(0))
+    batch = make_batch(cfg)
+    plain = make_runner(cfg, "adalomo", params=params,
+                        schedule=LRSchedule(1e-3))
+    clipped = make_runner(cfg, "adalomo", params=params,
+                          schedule=LRSchedule(1e-3),
+                          adalomo=AdaLomoConfig(grad_clip=1e6))
+    np.testing.assert_allclose(float(plain.train_step(batch)),
+                               float(clipped.train_step(batch)), atol=1e-6)
+    for a, b in zip(jax.tree.leaves(plain.params),
+                    jax.tree.leaves(clipped.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+@pytest.mark.parametrize("family,expected_m", [("hybrid", 2), ("xlstm", 2)])
+@pytest.mark.parametrize("strategy", ["lomo", "adalomo"])
+def test_super_block_liveness_agrees_with_memory_model(family, expected_m,
+                                                       strategy):
+    """zamba2/xlstm fuse at super-block grain: the strategies declare it
+    (memory_m = pieces.liveness_m) and ``analyze`` prices the same bytes —
+    the cross-family version of the conformance battery's dense-only
+    memory check."""
+    cfg = tiny_cfg(family)
+    r = make_runner(cfg, strategy, seed=0, schedule=LRSchedule(1e-3))
+    s = r.strategy
+    assert s.memory_m == expected_m, (family, s.memory_m)
+    shapes = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), r.state.params)
+    rep = analyze(shapes, s.model.unit_spec(cfg), optimizer="sgd",
+                  precision="fp32", mode=s.memory_mode, m=s.memory_m)
+    assert rep.grad_mb * 2**20 == 4 * s.peak_grad_params(r.state.params)
+    assert s.peak_grad_params(r.state.params) < tree_size(r.state.params)

@@ -1,4 +1,5 @@
-"""Docs health check: dead links + python code-fence compile/doctest.
+"""Docs health check: dead links, python code-fence compile/doctest, and
+registry-driven strategy-table drift.
 
     python tools/check_docs.py [root]
 
@@ -9,11 +10,22 @@ Scans README.md and docs/**/*.md for
   the linking document;
 - **broken python fences**: every ```python code fence must at least
   byte-compile; fences containing ``>>>`` prompts additionally run through
-  ``doctest`` (so examples with expected output are executed and checked).
+  ``doctest`` (so examples with expected output are executed and checked);
+- **strategy-table drift**: the hand-written strategy tables in README.md
+  (one ROW per strategy) and docs/strategies.md (one catalogue COLUMN per
+  strategy) are verified against the LIVE registry — every registered name
+  must appear exactly once, no stale/unknown name may sit in a name slot,
+  and any "<N> fine-tuning strategies" prose count must equal
+  ``len(registry)``.  The registry is read by scanning ``src/repro`` for
+  ``@register_strategy("...")`` decorators — the decorators ARE the
+  registry for in-tree code, and the scan needs no jax (the CI docs job
+  installs no deps); ``tests/test_docs.py`` pins the scan to
+  ``repro.core.registry.strategy_ids()``.
 
 Exit code 0 = clean; 1 = problems (one line each on stderr). Run by the CI
 docs job and by tests/test_docs.py, so a PR cannot land docs that point
-nowhere or snippets that do not parse.
+nowhere, snippets that do not parse, or a strategy table one registry
+entry behind.
 """
 from __future__ import annotations
 
@@ -79,19 +91,133 @@ def check_fences(md: Path, fences, root: Path) -> list[str]:
         if lang not in ("python", "py"):
             continue
         name = f"{md.relative_to(root)}:{lineno}"
-        try:
-            compile(src, name, "exec")
-        except SyntaxError as e:
-            problems.append(f"{name}: python fence does not compile: {e}")
-            continue
         if ">>>" in src:
+            # interactive example: doctest parses the prompts itself (the
+            # raw source would not byte-compile), runs it and checks output
+            try:
+                test = doctest.DocTestParser().get_doctest(
+                    src, {}, name, str(md), lineno)
+            except ValueError as e:
+                problems.append(f"{name}: doctest does not parse: {e}")
+                continue
             runner = doctest.DocTestRunner(verbose=False)
-            test = doctest.DocTestParser().get_doctest(
-                src, {}, name, str(md), lineno)
             runner.run(test)
             if runner.failures:
                 problems.append(f"{name}: doctest failed "
                                 f"({runner.failures} example(s))")
+            continue
+        try:
+            compile(src, name, "exec")
+        except SyntaxError as e:
+            problems.append(f"{name}: python fence does not compile: {e}")
+    return problems
+
+
+# ------------------------------------------------- strategy-table drift
+
+_DECORATOR = re.compile(r"@register_strategy\(\s*[\"']([\w\-]+)[\"']\s*\)")
+# a backticked name in a table's NAME slot: first cell of a row (README
+# layout) or any cell of a table's header row (strategies.md catalogue)
+_ROW_NAME = re.compile(r"^\|\s*`([\w\-]+)`\s*\|")
+_CELL_NAME = re.compile(r"`([\w\-]+)`")
+_COUNT_PROSE = re.compile(r"\b([A-Za-z]+|\d+) fine-tuning strategies\b")
+_WORD_NUMS = {w: i for i, w in enumerate(
+    ["zero", "one", "two", "three", "four", "five", "six", "seven", "eight",
+     "nine", "ten", "eleven", "twelve"])}
+
+
+def registry_names(root: Path) -> list[str]:
+    """The live strategy registry under ``root``: every
+    ``@register_strategy("name")`` decorator in ``src/repro``.  The
+    decorators ARE the registry for everything in-tree, and reading them
+    needs no jax (the CI docs job installs nothing) and stays scoped to
+    ``root`` (a tmp-tree check must not see this repo's registry).  Only if
+    the scan finds nothing does it fall back to importing
+    ``repro.core.registry`` from ``root/src``."""
+    src = root / "src" / "repro"
+    if not src.exists():
+        return []          # not this repo's layout: nothing to cross-check
+    names = set()
+    for py in sorted(src.rglob("*.py")):
+        names |= set(_DECORATOR.findall(py.read_text(encoding="utf-8")))
+    if names:
+        return sorted(names)
+    sys.path.insert(0, str(root / "src"))
+    try:
+        from repro.core.registry import strategy_ids
+        return strategy_ids()
+    except Exception:
+        return []
+    finally:
+        sys.path.pop(0)
+
+
+def _parse_number(tok: str):
+    if tok.isdigit():
+        return int(tok)
+    return _WORD_NUMS.get(tok.lower())
+
+
+def _table_blocks(outside_text: str) -> list[list[str]]:
+    """Contiguous runs of markdown table lines (``|``-prefixed)."""
+    blocks, cur = [], []
+    for line in outside_text.splitlines():
+        if line.lstrip().startswith("|"):
+            cur.append(line.strip())
+        elif cur:
+            blocks.append(cur)
+            cur = []
+    if cur:
+        blocks.append(cur)
+    return blocks
+
+
+def _name_slots(blocks: list[list[str]]) -> list[str]:
+    """Every backticked name occupying a strategy-name slot: the first cell
+    of a body row, plus every cell of each table's header row (the
+    catalogue table in strategies.md names strategies in its columns)."""
+    names = []
+    for block in blocks:
+        if block:
+            names += _CELL_NAME.findall(block[0])       # header cells
+        for line in block[1:]:
+            if set(line) <= set("|-: "):
+                continue                                # separator row
+            m = _ROW_NAME.match(line)
+            if m:
+                names.append(m.group(1))
+    return names
+
+
+def check_strategy_tables(md: Path, outside_text: str, root: Path,
+                          registered: list[str]) -> list[str]:
+    """README.md / docs/strategies.md only: their strategy tables must
+    mirror the registry exactly — no missing entry, no stale name, no
+    duplicates — and any strategy-count prose must match ``len(registry)``.
+
+    Convention these two documents hold to (and this check enforces): a
+    backticked token in a table NAME SLOT — the first cell of a body row,
+    or any header-row cell — is a strategy name and nothing else."""
+    problems = []
+    slots = _name_slots(_table_blocks(outside_text))
+    rel = md.relative_to(root)
+    for name in registered:
+        n = slots.count(name)
+        if n == 0:
+            problems.append(f"{rel}: registered strategy `{name}` missing "
+                            "from the strategy table")
+        elif n > 1:
+            problems.append(f"{rel}: strategy `{name}` appears {n}x in "
+                            "table name slots (expected exactly once)")
+    for s in sorted({s for s in slots if s not in registered}):
+        problems.append(f"{rel}: table names strategy `{s}` which is not "
+                        "in the registry (stale entry?)")
+    for m in _COUNT_PROSE.finditer(outside_text):
+        n = _parse_number(m.group(1))
+        if n is not None and n != len(registered):
+            problems.append(
+                f"{rel}: prose says \"{m.group(0)}\" but the registry has "
+                f"{len(registered)} ({', '.join(registered)})")
     return problems
 
 
@@ -99,12 +225,16 @@ def check(root: Path) -> list[str]:
     files = doc_files(root)
     if not files:
         return [f"no README.md or docs/ under {root}"]
+    registered = registry_names(root)
+    table_docs = {root / "README.md", root / "docs" / "strategies.md"}
     problems = []
     for md in files:
         text = md.read_text(encoding="utf-8")
         fences, outside = _split_fences(text)
         problems += check_links(md, outside, root)
         problems += check_fences(md, fences, root)
+        if registered and md in table_docs:
+            problems += check_strategy_tables(md, outside, root, registered)
     return problems
 
 

@@ -24,7 +24,8 @@ from pathlib import Path
 
 # keep in sync with repro.core.registry's built-ins; importable fallback
 # below refreshes it when run with PYTHONPATH=src
-STRATEGIES = ["hift", "fpft", "mezo", "lisa", "lomo"]
+STRATEGIES = ["hift", "hift_pipelined", "fpft", "mezo", "lisa", "lomo",
+              "adalomo"]
 try:
     from repro.core.registry import strategy_ids
     STRATEGIES = strategy_ids()
