@@ -161,6 +161,11 @@ class AdaLomoConfig:
     eps1: float = 1e-30               # Adafactor's gradient-square epsilon
     clip_threshold: float = 1.0       # per-matrix update-RMS clip d
     decay_rate: float = 0.8           # beta2 schedule 1 - t^-decay_rate
+    relative_step: bool = False       # alpha = lr * max(eps2, RMS(p)) — the
+                                      # paper's grouped update size; RMS is
+                                      # per trailing matrix (matrix_rms), so
+                                      # fused and fallback paths agree
+    eps2: float = 1e-3                # relative-step LR floor
 
 
 # -------------------------------------------------------------- TrainState
@@ -1141,7 +1146,8 @@ def _ada_tree(params: PyTree, grads: PyTree, moms: PyTree, lr, beta2, scale,
         g = (g * scale).astype(g.dtype)
         return leaf_update(p, g, m, lr, beta2, eps1=acfg.eps1,
                            clip_threshold=acfg.clip_threshold,
-                           weight_decay=acfg.weight_decay, matrix_rms=True)
+                           weight_decay=acfg.weight_decay, matrix_rms=True,
+                           relative_step=acfg.relative_step, eps2=acfg.eps2)
 
     flat_p, treedef = jax.tree.flatten(params)
     flat_g = treedef.flatten_up_to(grads)

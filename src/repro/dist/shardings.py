@@ -241,3 +241,35 @@ def adalomo_step_shardings(mesh, params: PyTree, opt_state: PyTree,
     o = param_shardings(opt_state, mesh)
     return ((p, o, batch_shardings(batch, mesh), scalar),
             (p, o, scalar, scalar))
+
+
+# ----------------------------------------------------------------- serving
+
+def prefill_step_shardings(mesh, params: PyTree, batch: PyTree,
+                           cache: PyTree, logits: PyTree):
+    """``(in_shardings, out_shardings)`` for the serving prefill
+    ``prefill(params, batch, cache) -> (logits, cache)``.
+
+    Params place exactly as the trainer's (the train→serve handoff is a
+    no-op reshard); the prompt batch splits over the data axes; the cache
+    follows the layout-agnostic cache rule with IDENTICAL in/out specs, so
+    an engine that donates the cache buffer stays copy-free."""
+    p = param_shardings(params, mesh)
+    c = cache_shardings(cache, mesh)
+    return ((p, batch_shardings(batch, mesh), c),
+            (batch_shardings(logits, mesh), c))
+
+
+def decode_step_shardings(mesh, params: PyTree, cache: PyTree,
+                          tokens: PyTree, logits: PyTree):
+    """``(in_shardings, out_shardings)`` for the serving decode step
+    ``decode(params, cache, tokens) -> (logits, cache)``.
+
+    Donation-safe for the cache (arg 1 / out 1 carry the same specs): the
+    decode loop rewrites the whole cache every token, so the engine donates
+    it and the matching specs make the update in-place.  Tokens and logits
+    split over the data axes like any batch."""
+    p = param_shardings(params, mesh)
+    c = cache_shardings(cache, mesh)
+    return ((p, c, batch_shardings(tokens, mesh)),
+            (batch_shardings(logits, mesh), c))

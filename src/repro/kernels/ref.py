@@ -19,6 +19,29 @@ def flash_attention_ref(q, k, v, causal: bool = True):
     return jnp.einsum("bhqk,bkhd->bqhd", p, v)
 
 
+def flash_decode_ref(q, k, v, lengths, starts=None):
+    """Single-query decode attention against a KV cache, fp32 softmax.
+
+    q: (B, H, hd) — one query per sequence (the token being decoded);
+    k/v: (B, S, H, hd) cache (kv heads already repeated to H);
+    lengths: (B,) int32 — keys at positions ``[starts[b], lengths[b])``
+    attend, everything else is masked (``starts=None`` means 0, i.e. no
+    left-pad region).  Rows with an empty valid range return garbage — the
+    caller masks them, exactly like the serving engine's idle slots.
+    Returns (B, H, hd).
+    """
+    b, s, h, hd = k.shape
+    scale = 1.0 / math.sqrt(hd)
+    sc = jnp.einsum("bhd,bkhd->bhk", q, k).astype(jnp.float32) * scale
+    pos = jnp.arange(s)[None, :]
+    valid = pos < lengths[:, None]
+    if starts is not None:
+        valid &= pos >= starts[:, None]
+    sc = jnp.where(valid[:, None, :], sc, -1e30)
+    p = jax.nn.softmax(sc, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhk,bkhd->bhd", p, v)
+
+
 def fused_adamw_ref(p, g, m, v, *, lr, b1, b2, eps, weight_decay, c1, c2):
     """Elementwise AdamW with bias-corrected moments (fp32 math)."""
     g32 = g.astype(jnp.float32)

@@ -294,8 +294,14 @@ def lower_train_cell(cfg: ArchConfig, shape: ShapeConfig, mesh,
     return lowered, groups_meta
 
 
-def lower_serve_cell(cfg: ArchConfig, shape: ShapeConfig, mesh):
-    """Lower prefill or decode step."""
+def lower_serve_cell(cfg: ArchConfig, shape: ShapeConfig, mesh,
+                     paged: bool = False):
+    """Lower prefill or decode step.
+
+    ``paged=True`` lowers the PAGED decode step for the dense families
+    (block tables into a shared page pool — the layout the continuous
+    serving engine runs), proving the production decode path partitions
+    at cell scale instead of the contiguous toy cache."""
     model = get_family(cfg)
     params_s = _abstract_params(cfg)
     pshard = param_shardings(params_s, mesh)
@@ -303,6 +309,37 @@ def lower_serve_cell(cfg: ArchConfig, shape: ShapeConfig, mesh):
     cshard = cache_shardings(cache_s, mesh)
     batch_s = input_specs(cfg, shape)
     bshard = batch_shardings(batch_s, mesh)
+
+    if paged and shape.kind == "decode" and cfg.family in ("dense", "vlm"):
+        from repro.models import transformer as TF
+        b = batch_s["tokens"].shape[0]
+        block_size = 128
+        max_blocks = -(-shape.seq_len // block_size)
+        n_blocks = 1 + b * max_blocks
+        pool_shape = (cfg.n_layers, n_blocks, block_size, cfg.kv_heads,
+                      cfg.head_dim)
+        pool_s = jax.ShapeDtypeStruct(pool_shape, jnp.bfloat16)
+        bt_s = jax.ShapeDtypeStruct((b, max_blocks), jnp.int32)
+        vec_s = jax.ShapeDtypeStruct((b,), jnp.int32)
+        pool_shard = cache_shardings(pool_s, mesh)
+        rep = NamedSharding(mesh, P())
+
+        def step(params, k_pool, v_pool, block_tables, lengths, pad, tokens):
+            return TF.paged_decode_step(cfg, params, k_pool, v_pool,
+                                        block_tables, lengths, pad, tokens,
+                                        compute_dtype=jnp.bfloat16)
+
+        fn = jax.jit(step,
+                     in_shardings=(pshard, pool_shard, pool_shard, rep, rep,
+                                   rep, bshard["tokens"]),
+                     out_shardings=(NamedSharding(mesh, P()), pool_shard,
+                                    pool_shard),
+                     donate_argnums=(1, 2))
+        with mesh, activation_sharding(mesh, _daxes(mesh)):
+            lowered = fn.lower(params_s, pool_s, pool_s, bt_s, vec_s, vec_s,
+                               batch_s["tokens"])
+        return lowered, {"mode": "decode_paged", "block_size": block_size,
+                         "n_blocks": n_blocks}
 
     if shape.kind == "prefill":
         def step(params, batch, cache):
@@ -328,7 +365,8 @@ def lower_serve_cell(cfg: ArchConfig, shape: ShapeConfig, mesh):
 
 def run_cell(arch_id: str, shape_name: str, multi_pod: bool = False,
              strategy: str = "hift", save: bool = True,
-             fused_update: bool = False, pipeline_depth: int = 1) -> dict:
+             fused_update: bool = False, pipeline_depth: int = 1,
+             paged: bool = False) -> dict:
     cfg = get_config(arch_id)
     shape = SHAPES[shape_name]
     ok, why = cell_supported(cfg, shape)
@@ -350,7 +388,7 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool = False,
             meta["fused_update"] = fused_update
             meta["pipeline_depth"] = pipeline_depth
         else:
-            lowered, meta = lower_serve_cell(cfg, shape, mesh)
+            lowered, meta = lower_serve_cell(cfg, shape, mesh, paged=paged)
         compiled = lowered.compile()
     except Exception as e:
         cell.update(status="error", error=f"{type(e).__name__}: {e}",
@@ -460,6 +498,9 @@ def main():
     ap.add_argument("--pipeline-depth", type=int, default=1,
                     help=">=2 accounts one extra device-resident bundle "
                          "(the prefetched one) in the per-device memory")
+    ap.add_argument("--paged", action="store_true",
+                    help="lower decode cells through the paged KV cache "
+                         "(block tables; dense families)")
     ap.add_argument("--fpft", action="store_true",
                     help="deprecated alias for --strategy fpft")
     args = ap.parse_args()
@@ -480,7 +521,7 @@ def main():
 
     results = [run_cell(a, s, multi_pod=mp, strategy=strategy,
                         fused_update=args.fused_update,
-                        pipeline_depth=args.pipeline_depth)
+                        pipeline_depth=args.pipeline_depth, paged=args.paged)
                for a, s, mp in cells]
     n_ok = sum(r["status"] == "ok" for r in results)
     n_skip = sum(r["status"] == "skipped" for r in results)

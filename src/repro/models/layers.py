@@ -157,7 +157,7 @@ def chunked_attention(q, k, v, block_q: int = 512, block_k: int = 512,
 
 
 def chunked_causal_attention(q, k, v, block_q: int = 512, block_k: int = 512,
-                             balanced: bool = False):
+                             balanced: bool = False, k_valid=None):
     """Flash-style online-softmax attention in pure jnp.
 
     Memory is O(block_q * block_k) per step instead of O(S^2); this is the
@@ -168,6 +168,10 @@ def chunked_causal_attention(q, k, v, block_q: int = 512, block_k: int = 512,
     causal mask — 2x the useful FLOPs.  ``balanced=True`` (hillclimbed):
     q blocks are processed in complementary pairs (i, n-1-i) so each pair
     scans exactly n+1 kv blocks — the causal-load-balancing schedule.
+
+    ``k_valid``: optional (B, S) bool — False marks keys nothing may attend
+    to (the serving engine's left-pad positions).  Queries at invalid
+    positions still produce (finite) outputs; callers ignore them.
     """
     b, s, h, hd = q.shape
     nq = max(1, s // block_q)
@@ -179,6 +183,7 @@ def chunked_causal_attention(q, k, v, block_q: int = 512, block_k: int = 512,
     qb = q.reshape(b, nq, block_q, h, hd)
     kb = k.reshape(b, nk, block_k, h, hd)
     vb = v.reshape(b, nk, block_k, h, hd)
+    kvb = None if k_valid is None else k_valid.reshape(b, nk, block_k)
 
     q_pos_base = jnp.arange(block_q)
     k_pos_base = jnp.arange(block_k)
@@ -193,6 +198,10 @@ def chunked_causal_attention(q, k, v, block_q: int = 512, block_k: int = 512,
         k_pos = kj_idx * block_k + k_pos_base
         causal = q_pos[:, None] >= k_pos[None, :]
         sc = jnp.where(causal[None, None], sc, -1e30)
+        if kvb is not None:
+            kv_blk = jax.lax.dynamic_index_in_dim(kvb, kj_idx, axis=1,
+                                                  keepdims=False)  # (B, bk)
+            sc = jnp.where(kv_blk[:, None, None, :], sc, -1e30)
         m_new = jnp.maximum(m, sc.max(axis=-1))
         p = jnp.exp(sc - m_new[..., None])
         corr = jnp.exp(m - m_new)
@@ -300,10 +309,14 @@ def gqa_attention(p, x, cfg, cos, sin, impl: str = "chunked",
     return o.reshape(b, s, cfg.n_heads * hd) @ p["wo"].astype(x.dtype)
 
 
-def gqa_decode_attention(p, x, cfg, cos, sin, cache_k, cache_v, position):
+def gqa_decode_attention(p, x, cfg, cos, sin, cache_k, cache_v, position,
+                         pad=None):
     """Single-token decode: x (B, 1, D); cache_k/v (B, max_len, KV, hd).
 
     Returns (out, new_cache_k, new_cache_v).  position: scalar int32 index.
+    ``pad``: optional (B,) int32 — per-row count of left-pad cache entries
+    (starting at ``cfg.vision_tokens``, which is 0 for text-only models)
+    that must never be attended to; the prefill stored garbage k/v there.
     """
     b, _, d = x.shape
     hd = cfg.head_dim
@@ -327,8 +340,13 @@ def gqa_decode_attention(p, x, cfg, cos, sin, cache_k, cache_v, position):
     vv = _repeat_kv(cache_v.astype(x.dtype), n_rep)
     scale = 1.0 / math.sqrt(hd)
     sc = jnp.einsum("bqhd,bkhd->bhqk", q, kk).astype(jnp.float32) * scale
-    valid = (jnp.arange(cache_k.shape[1]) <= position)[None, None, None, :]
-    sc = jnp.where(valid, sc, -1e30)
+    idx = jnp.arange(cache_k.shape[1])
+    valid = (idx <= position)[None, :]                       # (1, max_len)
+    if pad is not None:
+        vt = getattr(cfg, "vision_tokens", 0) or 0
+        valid = valid & ((idx[None, :] < vt)
+                         | (idx[None, :] >= vt + pad[:, None]))
+    sc = jnp.where(valid[:, None, None, :], sc, -1e30)
     probs = jax.nn.softmax(sc, axis=-1).astype(x.dtype)
     o = jnp.einsum("bhqk,bkhd->bqhd", probs, vv)
     o = o.reshape(b, 1, cfg.n_heads * hd) @ p["wo"].astype(x.dtype)

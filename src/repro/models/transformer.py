@@ -6,6 +6,7 @@ stub patch embeddings per the assignment: the ViT frontend is NOT modeled).
 """
 from __future__ import annotations
 
+import math
 from typing import Any, Optional
 
 import jax
@@ -183,20 +184,44 @@ def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
     hd = cfg.head_dim
     shape = (cfg.n_layers, batch, max_len, cfg.kv_heads, hd)
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
-            "pos": jnp.zeros((), jnp.int32)}
+            "pos": jnp.zeros((), jnp.int32),
+            "pad": jnp.zeros((batch,), jnp.int32)}
+
+
+def _pad_valid(cfg: ArchConfig, pad, s: int):
+    """(B, S) key-validity mask from per-row left-pad counts.
+
+    The engine left-pads ragged prompts, so row b's invalid region is the
+    ``pad[b]`` positions starting at ``cfg.vision_tokens`` (vision stub
+    tokens, always valid, sit in front for the vlm family; 0 otherwise)."""
+    idx = jnp.arange(s)
+    vt = cfg.vision_tokens
+    return (idx[None, :] < vt) | (idx[None, :] >= vt + pad[:, None])
 
 
 def prefill(cfg: ArchConfig, params: PyTree, batch, cache: PyTree,
             compute_dtype=jnp.bfloat16):
-    """Run the full prompt, fill the KV cache, return last-token logits."""
+    """Run the full prompt, fill the KV cache, return last-token logits.
+
+    ``batch`` may carry ``"pad"`` — per-row left-pad counts for ragged
+    prompts.  Pad positions are masked out of every attention (their k/v
+    still lands in the cache, so the mask is ALSO stored under the cache's
+    ``"pad"`` leaf and re-applied by every later decode step).  RoPE is
+    relative, so the uniform position shift left-padding introduces cancels
+    between prefill and decode once pad keys are masked.
+    """
     h = _embed_in(cfg, params, batch).astype(compute_dtype)
     b, s, _ = h.shape
     cos, sin = _rope(cfg, s)
     cache_dtype = cache["k"].dtype
+    _, norm = _norm_fns(cfg)
+    _, mlp = _mlp_fns(cfg)
+    pad = batch.get("pad")
+    k_valid = None if pad is None else _pad_valid(cfg, pad, s)
 
     def step(h, xs):
         p, _ = xs
-        hn = L.rmsnorm(p["ln1"], h)
+        hn = norm(p["ln1"], h)
         q = hn @ p["attn"]["wq"].astype(h.dtype)
         k = hn @ p["attn"]["wk"].astype(h.dtype)
         v = hn @ p["attn"]["wv"].astype(h.dtype)
@@ -214,9 +239,10 @@ def prefill(cfg: ArchConfig, params: PyTree, batch, cache: PyTree,
         kk = L._repeat_kv(k, n_rep)
         vv = L._repeat_kv(v, n_rep)
         o = L.chunked_causal_attention(q, kk, vv, cfg.block_q, cfg.block_k,
-                                       balanced=cfg.attention_balanced)
+                                       balanced=cfg.attention_balanced,
+                                       k_valid=k_valid)
         h = h + o.reshape(b, s, cfg.n_heads * cfg.head_dim) @ p["attn"]["wo"].astype(h.dtype)
-        h = h + L.swiglu(p["mlp"], L.rmsnorm(p["ln2"], h))
+        h = h + mlp(p["mlp"], norm(p["ln2"], h))
         return h, new_entry
 
     def scan_step(carry, xs):
@@ -231,6 +257,7 @@ def prefill(cfg: ArchConfig, params: PyTree, batch, cache: PyTree,
         "v": jax.lax.dynamic_update_slice_in_dim(
             cache["v"], entries["v"], 0, axis=2),
         "pos": jnp.asarray(s, jnp.int32),
+        "pad": pad if pad is not None else jnp.zeros((b,), jnp.int32),
     }
     h = _norm_fns(cfg)[1](params["head"]["final_norm"], h[:, -1:])
     logits = h @ head_weight(cfg, params).astype(h.dtype)
@@ -247,18 +274,105 @@ def decode_step(cfg: ArchConfig, params: PyTree, cache: PyTree, tokens,
     max_len = cache["k"].shape[2]
     cos, sin = _rope(cfg, max_len)
     pos = cache["pos"]
+    pad = cache.get("pad")
+    _, norm = _norm_fns(cfg)
+    _, mlp = _mlp_fns(cfg)
 
     def step(h, p, layer_cache):
-        hn = L.rmsnorm(p["ln1"], h)
+        hn = norm(p["ln1"], h)
         o, ck, cv = L.gqa_decode_attention(p["attn"], hn, cfg, cos, sin,
-                                           layer_cache["k"], layer_cache["v"], pos)
+                                           layer_cache["k"], layer_cache["v"],
+                                           pos, pad=pad)
         h = h + o
-        h = h + L.swiglu(p["mlp"], L.rmsnorm(p["ln2"], h))
+        h = h + mlp(p["mlp"], norm(p["ln2"], h))
         return h, {"k": ck, "v": cv}
 
     h, new_kv = scan_layers_with_cache(step, params["layers"],
                                        {"k": cache["k"], "v": cache["v"]}, h)
     h = _norm_fns(cfg)[1](params["head"]["final_norm"], h)
     logits = h @ head_weight(cfg, params).astype(h.dtype)
-    return logits.astype(jnp.float32), {"k": new_kv["k"], "v": new_kv["v"],
-                                        "pos": pos + 1}
+    new_cache = {"k": new_kv["k"], "v": new_kv["v"], "pos": pos + 1}
+    if pad is not None:
+        new_cache["pad"] = pad
+    return logits.astype(jnp.float32), new_cache
+
+
+def paged_decode_step(cfg: ArchConfig, params: PyTree, k_pool, v_pool,
+                      block_tables, lengths, pad, tokens,
+                      compute_dtype=jnp.float32):
+    """One decode step against a PAGED KV cache (``repro.serve.kv_cache``).
+
+    k_pool/v_pool: (L, n_blocks, block_size, KV, hd) shared page pools;
+    block_tables: (B, max_blocks) int32 logical->physical page map per slot
+    (unused entries must point at the reserved null page 0);
+    lengths: (B,) int32 — per-slot decode position (= rows already filled);
+    pad: (B,) int32 left-pad counts; tokens: (B, 1) int32.
+
+    Returns ``(logits (B, 1, V), new_k_pool, new_v_pool)``.  Lengths are NOT
+    advanced here — the engine owns slot bookkeeping (idle slots keep
+    length 0 and scribble into the null page).
+
+    The attention below is the pure-jnp twin of
+    ``kernels.flash_attention.paged_flash_decode_pallas`` (gather pages,
+    mask ``[pad, length]``, softmax): it lowers on any backend, while the
+    Pallas kernel is the TPU-target path the dryrun decode cells price.
+    """
+    n_layers, n_blocks, block_size, kvh, hd = k_pool.shape
+    b, max_blocks = block_tables.shape
+    cap = max_blocks * block_size
+    h = params["embed"]["tok"][tokens].astype(compute_dtype)
+    cos, sin = _rope(cfg, cap)
+    positions = lengths[:, None]                              # (B, 1)
+    phys = jnp.take_along_axis(block_tables,
+                               (lengths // block_size)[:, None], axis=1)[:, 0]
+    offs = lengths % block_size
+    rows = jnp.arange(b)
+    n_rep = cfg.n_heads // cfg.kv_heads
+    scale = 1.0 / math.sqrt(hd)
+    idx = jnp.arange(cap)
+    valid = (idx[None, :] >= pad[:, None]) & (idx[None, :] <= lengths[:, None])
+    _, norm = _norm_fns(cfg)
+    _, mlp = _mlp_fns(cfg)
+
+    def step(h, xs):
+        p, kp, vp = xs                                        # per-layer pools
+        hn = norm(p["ln1"], h)
+        q = hn @ p["attn"]["wq"].astype(h.dtype)
+        k = hn @ p["attn"]["wk"].astype(h.dtype)
+        v = hn @ p["attn"]["wv"].astype(h.dtype)
+        if "bq" in p["attn"]:
+            q = q + p["attn"]["bq"].astype(h.dtype)
+            k = k + p["attn"]["bk"].astype(h.dtype)
+            v = v + p["attn"]["bv"].astype(h.dtype)
+        q = q.reshape(b, 1, cfg.n_heads, hd)
+        k = k.reshape(b, 1, cfg.kv_heads, hd)
+        v = v.reshape(b, 1, cfg.kv_heads, hd)
+        q = L.apply_rope(q, cos, sin, positions)
+        k = L.apply_rope(k, cos, sin, positions)
+        # scatter the new k/v into each slot's current page
+        kp = kp.at[phys, offs].set(k[:, 0].astype(kp.dtype), mode="drop")
+        vp = vp.at[phys, offs].set(v[:, 0].astype(vp.dtype), mode="drop")
+        # gather the slot's pages back as a contiguous view and attend
+        kk = L._repeat_kv(
+            kp[block_tables].reshape(b, cap, cfg.kv_heads, hd).astype(h.dtype),
+            n_rep)
+        vv = L._repeat_kv(
+            vp[block_tables].reshape(b, cap, cfg.kv_heads, hd).astype(h.dtype),
+            n_rep)
+        sc = jnp.einsum("bqhd,bkhd->bhqk", q, kk).astype(jnp.float32) * scale
+        sc = jnp.where(valid[:, None, None, :], sc, -1e30)
+        probs = jax.nn.softmax(sc, axis=-1).astype(h.dtype)
+        o = jnp.einsum("bhqk,bkhd->bqhd", probs, vv)
+        o = o.reshape(b, 1, cfg.n_heads * hd) @ p["attn"]["wo"].astype(h.dtype)
+        h = h + o
+        h = h + mlp(p["mlp"], norm(p["ln2"], h))
+        return h, (kp, vp)
+
+    def scan_step(carry, xs):
+        return step(carry, xs)
+
+    h, (new_k, new_v) = jax.lax.scan(scan_step, h,
+                                     (params["layers"], k_pool, v_pool))
+    h = _norm_fns(cfg)[1](params["head"]["final_norm"], h)
+    logits = h @ head_weight(cfg, params).astype(h.dtype)
+    return logits.astype(jnp.float32), new_k, new_v

@@ -48,7 +48,8 @@ def moment_init(p, stacked: bool = False):
 
 def leaf_update(p, g, mom, lr, beta2, *, eps1: float = 1e-30,
                 clip_threshold: float = 1.0, weight_decay: float = 0.0,
-                matrix_rms: bool = False):
+                matrix_rms: bool = False, relative_step: bool = False,
+                eps2: float = 1e-3):
     """One Adafactor update on one leaf -> ``(new_p, new_mom)``.
 
     Dispatches on the MOMENT structure (``vr``/``vc`` = factored over the
@@ -57,7 +58,14 @@ def leaf_update(p, g, mom, lr, beta2, *, eps1: float = 1e-30,
     per trailing matrix (per layer, when leading dims are a stack) instead
     of over the whole leaf — the semantics the AdaLomo strategy needs so its
     fused per-layer path and its whole-segment fallback agree exactly; the
-    classic :func:`adafactor` optimizer keeps the whole-leaf RMS."""
+    classic :func:`adafactor` optimizer keeps the whole-leaf RMS.
+
+    ``relative_step=True`` turns ``lr`` into Adafactor's RELATIVE step
+    schedule ``alpha = lr * max(eps2, RMS(p))`` — the step scales with the
+    parameter's own magnitude, floored at ``eps2`` so zero-initialized
+    tensors still move.  RMS(p) follows the same granularity as the clip
+    (per trailing matrix under ``matrix_rms``), keeping the fused/fallback
+    parity exact."""
     g32 = g.astype(jnp.float32)
     gsq = jnp.square(g32) + eps1
     if "vr" in mom:
@@ -74,16 +82,24 @@ def leaf_update(p, g, mom, lr, beta2, *, eps1: float = 1e-30,
         u = g32 / jnp.sqrt(v)
         new_mom = {"v": v}
         rms_axes = (-1,) if (matrix_rms and g.ndim >= 1) else None
+    keep = rms_axes is not None
     rms_u = jnp.sqrt(jnp.mean(jnp.square(u), axis=rms_axes,
-                              keepdims=rms_axes is not None) + 1e-12)
+                              keepdims=keep) + 1e-12)
     u = u / jnp.maximum(1.0, rms_u / clip_threshold)
-    step = lr * (u + weight_decay * p.astype(jnp.float32))
-    return (p.astype(jnp.float32) - step).astype(p.dtype), new_mom
+    p32 = p.astype(jnp.float32)
+    alpha = lr
+    if relative_step:
+        rms_p = jnp.sqrt(jnp.mean(jnp.square(p32), axis=rms_axes,
+                                  keepdims=keep))
+        alpha = lr * jnp.maximum(eps2, rms_p)
+    step = alpha * (u + weight_decay * p32)
+    return (p32 - step).astype(p.dtype), new_mom
 
 
 def adafactor(eps1: float = 1e-30, eps2: float = 1e-3,
               clip_threshold: float = 1.0, weight_decay: float = 0.0,
-              grad_clip: float = 0.0, decay_rate: float = 0.8) -> Optimizer:
+              grad_clip: float = 0.0, decay_rate: float = 0.8,
+              relative_step: bool = False) -> Optimizer:
     def init(params):
         return {
             "moments": jax.tree.map(moment_init, params),
@@ -99,7 +115,8 @@ def adafactor(eps1: float = 1e-30, eps2: float = 1e-3,
         def upd(p, g, mom):
             return leaf_update(p, g, mom, lr, beta2, eps1=eps1,
                                clip_threshold=clip_threshold,
-                               weight_decay=weight_decay)
+                               weight_decay=weight_decay,
+                               relative_step=relative_step, eps2=eps2)
 
         flat_p, treedef = jax.tree.flatten(params)
         flat_g = treedef.flatten_up_to(grads)

@@ -1,9 +1,20 @@
-"""Serving engine: prefill + batched decode with KV/state caches.
+"""Serving engines: prefill + batched decode with KV/state caches.
 
-A deliberately small continuous-batching-lite engine: fixed decode batch,
-requests queue up, finished slots are refilled at prefill boundaries.  The
-decode step is a single jitted function (donated cache), which is exactly
-what the decode_32k / long_500k dry-run cells lower at production scale.
+Two engines share the sampling/prefill machinery:
+
+- :class:`ServeEngine` — fixed decode batch over a contiguous cache, every
+  family.  Refills only at prefill boundaries; it is the simple baseline
+  (and the numerically bit-stable oracle the continuous engine is tested
+  against token-for-token).
+- :class:`ContinuousServeEngine` — slot-level continuous batching over the
+  paged cache (``serve.kv_cache``) driven by ``serve.scheduler``: per-slot
+  admission with full-budget reservation, per-request max_new/EOS stop, and
+  mid-decode refill.  Dense family only (the paged decode path lives in
+  ``models.transformer.paged_decode_step``).
+
+Both take ``mesh=`` to serve sharded on the same ``dist/shardings`` rules
+the trainer uses, and both expose ``from_train_state`` — the one-call
+train→serve handoff from a (possibly sharded) ``TrainState``.
 """
 from __future__ import annotations
 
@@ -12,11 +23,16 @@ from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models import get_family
+from repro.serve.kv_cache import PagedKVCache
+from repro.serve.scheduler import Scheduler, ServeRequest
 
 PyTree = Any
+
+_PAD_FAMILIES = ("dense", "vlm")   # families whose prefill masks left-pad
 
 
 @dataclasses.dataclass
@@ -31,12 +47,32 @@ def greedy_sample(logits: jnp.ndarray) -> jnp.ndarray:
     return jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
 
+def _extract_params(state_or_params):
+    """Accept a TrainState, a ``{"params": ...}`` tree, or bare params."""
+    params = getattr(state_or_params, "params", state_or_params)
+    if isinstance(params, dict) and "params" in params \
+            and isinstance(params["params"], dict):
+        params = params["params"]
+    return params
+
+
+def _place_params(params, mesh):
+    from repro.dist.shardings import param_shardings
+    return jax.device_put(params, param_shardings(params, mesh))
+
+
+def _donate(*argnums):
+    """Repo-wide convention: donation is a no-op (and warns) on CPU."""
+    return () if jax.devices()[0].platform == "cpu" else argnums
+
+
 class ServeEngine:
     def __init__(self, cfg: ArchConfig, params: PyTree, max_len: int = 512,
                  batch: int = 4, compute_dtype=jnp.float32,
-                 sample_fn: Callable = greedy_sample):
+                 sample_fn: Callable = greedy_sample, mesh=None):
         self.cfg = cfg
-        self.params = params
+        self.mesh = mesh
+        self.params = _place_params(params, mesh) if mesh is not None else params
         self.model = get_family(cfg)
         self.max_len = max_len
         self.batch = batch
@@ -59,23 +95,57 @@ class ServeEngine:
             return model.decode_step(c, params, cache, tokens,
                                      compute_dtype=compute_dtype)
 
-        self._decode = jax.jit(_decode)
-
         def _prefill(params, batch_in, cache):
             return model.prefill(c, params, batch_in, cache,
                                  compute_dtype=compute_dtype)
 
-        self._prefill = jax.jit(_prefill)
+        if mesh is None:
+            self._decode = jax.jit(_decode, donate_argnums=_donate(1))
+            self._prefill = jax.jit(_prefill)
+        else:
+            from repro.dist.shardings import (decode_step_shardings,
+                                              prefill_step_shardings)
+            cache = jax.eval_shape(self._init_cache)
+            tok = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+            lg = jax.eval_shape(lambda p, ca, t: _decode(p, ca, t)[0],
+                                self.params, cache, tok)
+            d_in, d_out = decode_step_shardings(mesh, self.params, cache,
+                                                tok, lg)
+            self._decode = jax.jit(_decode, in_shardings=d_in,
+                                   out_shardings=d_out,
+                                   donate_argnums=_donate(1))
+            # prompt layouts vary per call, so only the OUTPUT placement is
+            # pinned: the cache must exit prefill exactly as decode's
+            # in_shardings expect it (else the first decode step reshards
+            # or, with donation, refuses the mismatched buffer).
+            _, p_out = prefill_step_shardings(mesh, self.params, {}, cache, lg)
+            self._prefill = jax.jit(_prefill, out_shardings=p_out)
+
+    @classmethod
+    def from_train_state(cls, cfg: ArchConfig, state, *, mesh=None, **kw):
+        """One-call train→serve handoff: pull params out of a (possibly
+        sharded) ``TrainState`` and stand up an engine.  ``mesh=None`` serves
+        wherever the params already live; a mesh re-places them under the
+        serving sharding rules (an all-gather/reshard per leaf at most)."""
+        return cls(cfg, _extract_params(state), mesh=mesh, **kw)
 
     def generate(self, prompts: list[jnp.ndarray], max_new_tokens: int = 16,
                  src_embeds: Optional[jnp.ndarray] = None) -> list[list[int]]:
-        """Batched greedy generation (prompts padded to equal length)."""
+        """Batched greedy generation (prompts left-padded to equal length;
+        pad positions are masked out of attention for the families that
+        support it).  Sampled tokens accumulate on device and transfer to
+        the host in ONE batched copy at the end — the decode loop itself
+        never blocks on a host sync."""
         assert len(prompts) <= self.batch
         plen = max(int(p.shape[0]) for p in prompts)
+        pads = [plen - int(p.shape[0]) for p in prompts] + \
+               [plen] * (self.batch - len(prompts))
         padded = jnp.stack([
             jnp.pad(p, (plen - p.shape[0], 0), constant_values=0) for p in prompts
         ] + [jnp.zeros((plen,), jnp.int32)] * (self.batch - len(prompts)))
         batch_in = {"tokens": padded}
+        if self.cfg.family in _PAD_FAMILIES:
+            batch_in["pad"] = jnp.asarray(pads, jnp.int32)
         if self.cfg.family == "encdec":
             if src_embeds is None:
                 raise ValueError("encdec serving needs src_embeds")
@@ -87,12 +157,144 @@ class ServeEngine:
         cache = self._init_cache()
         logits, cache = self._prefill(self.params, batch_in, cache)
         tok = self.sample_fn(logits[:, -1])
-        outs = [[int(tok[i])] for i in range(len(prompts))]
+        toks_dev = [tok]
         cur = tok.reshape(self.batch, 1)
         for _ in range(max_new_tokens - 1):
             logits, cache = self._decode(self.params, cache, cur)
             tok = self.sample_fn(logits[:, -1])
             cur = tok.reshape(self.batch, 1)
-            for i in range(len(prompts)):
-                outs[i].append(int(tok[i]))
-        return outs
+            toks_dev.append(tok)
+        all_toks = np.asarray(jnp.stack(toks_dev, axis=1))  # (B, max_new)
+        return [list(map(int, all_toks[i])) for i in range(len(prompts))]
+
+
+class ContinuousServeEngine:
+    """Continuous batching over the paged KV cache (dense family).
+
+    ``slots`` is the decode batch width; ``n_blocks``/``block_size`` size
+    the shared page pool; ``max_blocks_per_slot`` caps one request's share
+    (its table width).  Prompts are left-padded up to ``prefill_bucket`` so
+    prefill compiles once; correctness relies on the pad mask the prefill
+    threads through attention, not on the pad content.
+    """
+
+    def __init__(self, cfg: ArchConfig, params: PyTree, *, slots: int = 4,
+                 block_size: int = 16, n_blocks: Optional[int] = None,
+                 max_blocks_per_slot: Optional[int] = None,
+                 prefill_bucket: int = 32, compute_dtype=jnp.float32,
+                 sample_fn: Callable = greedy_sample, mesh=None):
+        if cfg.family not in _PAD_FAMILIES:
+            raise ValueError("continuous batching currently serves the dense "
+                             f"family, not {cfg.family!r}")
+        self.cfg = cfg
+        self.mesh = mesh
+        self.params = _place_params(params, mesh) if mesh is not None else params
+        self.model = get_family(cfg)
+        self.slots = slots
+        self.block_size = block_size
+        self.prefill_bucket = prefill_bucket
+        if max_blocks_per_slot is None:
+            max_blocks_per_slot = -(-(prefill_bucket + 64) // block_size)
+        if n_blocks is None:
+            n_blocks = 1 + slots * max_blocks_per_slot
+        self.cache = PagedKVCache(cfg, n_blocks=n_blocks,
+                                  block_size=block_size, slots=slots,
+                                  max_blocks_per_slot=max_blocks_per_slot,
+                                  dtype=jnp.float32 if compute_dtype == jnp.float32
+                                  else jnp.bfloat16)
+        self.compute_dtype = compute_dtype
+        self.sample_fn = sample_fn
+        self.scheduler = Scheduler(slots)
+        self._cur = np.zeros((slots, 1), np.int32)   # last sampled token/slot
+        self.steps = 0                                # jitted decode calls
+
+        model, c = self.model, cfg
+
+        def _prefill_one(params, batch_in, cache):
+            logits, cache = model.prefill(c, params, batch_in, cache,
+                                          compute_dtype=compute_dtype)
+            return sample_fn(logits[:, -1]), cache["k"], cache["v"]
+
+        def _decode(params, k_pool, v_pool, block_tables, lengths, pads,
+                    tokens):
+            logits, k_pool, v_pool = model.paged_decode_step(
+                c, params, k_pool, v_pool, block_tables, lengths, pads,
+                tokens, compute_dtype=compute_dtype)
+            return sample_fn(logits[:, -1]), k_pool, v_pool
+
+        self._prefill_one = jax.jit(_prefill_one)
+        self._decode = jax.jit(_decode, donate_argnums=_donate(1, 2))
+
+    @classmethod
+    def from_train_state(cls, cfg: ArchConfig, state, *, mesh=None, **kw):
+        """Same handoff contract as :meth:`ServeEngine.from_train_state`."""
+        return cls(cfg, _extract_params(state), mesh=mesh, **kw)
+
+    # -- internals -----------------------------------------------------------
+    def _bucket(self, plen: int) -> int:
+        b = self.prefill_bucket
+        while b < plen:
+            b *= 2
+        return b
+
+    def _admit(self, slot: int, req: ServeRequest) -> bool:
+        return self.cache.admit(slot, self._bucket(len(req.prompt))
+                                + req.max_new_tokens)
+
+    def _start(self, slot: int, req: ServeRequest) -> None:
+        """Prefill one admitted request and park it in ``slot``."""
+        plen = len(req.prompt)
+        bucket = self._bucket(plen)
+        pad = bucket - plen
+        toks = jnp.asarray([[0] * pad + list(req.prompt)], jnp.int32)
+        cache = self.model.init_cache(self.cfg, 1, bucket,
+                                      dtype=self.cache.k_pool.dtype)
+        batch_in = {"tokens": toks, "pad": jnp.asarray([pad], jnp.int32)}
+        tok, k_new, v_new = self._prefill_one(self.params, batch_in, cache)
+        # (L, 1, bucket, KV, hd) -> the slot's pages
+        self.cache.write_prefill(slot, k_new[:, 0], v_new[:, 0], pad=pad)
+        first = int(tok[0])
+        self._cur[slot, 0] = first
+        if req.record(first):
+            self.scheduler.active[slot] = None
+            self.scheduler.stats.n_finished += 1
+            self.cache.release(slot)
+
+    def _fill(self) -> None:
+        while True:
+            placed = self.scheduler.fill(self._admit)
+            if not placed:
+                break
+            for slot, req in placed:
+                self._start(slot, req)
+            # _start may free slots again (1-token requests) — loop until
+            # no placement happens, then decode.
+
+    def run(self, requests: list[ServeRequest]) -> list[ServeRequest]:
+        """Drive every request to completion; returns them in submit order
+        with ``out_tokens`` filled.  One host transfer per decode step (the
+        sampled tokens — the scheduler needs them for EOS/refill decisions);
+        cache pools stay resident on device and are donated through the
+        jitted step."""
+        for r in requests:
+            self.scheduler.submit(r)
+        self._fill()
+        while self.scheduler.has_work:
+            lengths = self.cache.lengths
+            toks, self.cache.k_pool, self.cache.v_pool = self._decode(
+                self.params, self.cache.k_pool, self.cache.v_pool,
+                self.cache.block_tables, jnp.asarray(lengths),
+                jnp.asarray(self.cache.pads),
+                jnp.asarray(self._cur))
+            self.steps += 1
+            toks_host = np.asarray(toks)          # the one sync point
+            active_slots = [i for i, r in enumerate(self.scheduler.active)
+                            if r is not None]
+            finished = self.scheduler.step_tokens(toks_host)
+            for slot in active_slots:
+                self._cur[slot, 0] = toks_host[slot]
+                self.cache.set_length(slot, int(lengths[slot]) + 1)
+            for slot in finished:
+                self.cache.release(slot)
+            self._fill()
+        return requests

@@ -84,6 +84,30 @@ def checkpoint_roundtrip(cfg, params, batch, mesh):
     return dparams, dopt
 
 
+def serve_handoff(cfg, params, batch, mesh):
+    """Train 2 sharded FPFT steps, then hand the sharded TrainState to the
+    serving engine in one call and generate on the same mesh.  Returns
+    (tokens match the unsharded engine, params were actually sharded)."""
+    from repro.core import LRSchedule, make_runner
+    from repro.serve.engine import ServeEngine
+
+    runner = make_runner(cfg, "fpft", params=params, mesh=mesh,
+                         optimizer="sgd", schedule=LRSchedule(1e-2))
+    run_steps(runner, batch, 2)
+    state = runner.state
+    sharded = any(d.id > 0 for x in jax.tree.leaves(state.params)
+                  for d in x.sharding.device_set)
+    prompts = [jax.random.randint(jax.random.PRNGKey(i), (6 + 3 * i,), 0,
+                                  cfg.vocab) for i in range(2)]
+    eng = ServeEngine.from_train_state(cfg, state, mesh=mesh,
+                                       max_len=48, batch=2)
+    got = eng.generate(prompts, max_new_tokens=6)
+    host_params = jax.device_get(state.params)
+    ref_eng = ServeEngine(cfg, host_params, max_len=48, batch=2)
+    want = ref_eng.generate(prompts, max_new_tokens=6)
+    return int(got == want), int(sharded)
+
+
 def main():
     assert len(jax.devices()) >= 4, jax.devices()
     from repro.core import HiFTConfig, LRSchedule, make_runner
@@ -133,6 +157,7 @@ def main():
                              schedule=LRSchedule(1e-3))
 
     out["ckpt"] = checkpoint_roundtrip(cfg, params, batch, mesh)
+    out["serve_handoff"] = serve_handoff(cfg, params, batch, mesh)
     print(json.dumps(out))
 
 

@@ -156,6 +156,85 @@ def test_adalomo_reduces_loss_and_reports_gnorm():
     assert r.strategy.peak_grad_params(r.params) < r.total_params()
 
 
+def test_adalomo_relative_step_reduces_loss():
+    """The paper's grouped update size: alpha = rho_t * max(eps2, RMS(p)).
+    With RMS(p) ~ 1e-2 at init, rho_t must be much larger than the absolute
+    lr to move at all — and with it, the loss drops fast."""
+    from repro.core import AdaLomoConfig
+    cfg = tiny_dense_cfg(ce_chunk=0)
+    r = make_runner(cfg, "adalomo", seed=0, schedule=LRSchedule(0.1),
+                    adalomo=AdaLomoConfig(relative_step=True))
+    batch = make_batch(cfg, batch=4, seq=32)
+    losses = [float(r.train_step(batch)) for _ in range(20)]
+    assert np.isfinite(losses).all()
+    assert losses[-1] < losses[0] * 0.5, (losses[0], losses[-1])
+
+
+def test_adalomo_relative_step_eps2_floor():
+    """eps2 floors the per-matrix step scale: a zero-initialized tensor
+    (RMS(p) = 0) still moves by exactly rho * eps2 * u on the first step."""
+    from repro.optim.adafactor import leaf_update, moment_init
+    p = jax.numpy.zeros((8, 16))
+    g = jax.random.normal(jax.random.PRNGKey(0), (8, 16))
+    mom = moment_init(p)
+    rho, eps2 = 0.5, 1e-3
+    new_p, _ = leaf_update(p, g, mom, rho, 0.9, matrix_rms=True,
+                           relative_step=True, eps2=eps2)
+    # clipped-RMS-1 update scaled by rho*eps2: |step| RMS == rho*eps2
+    rms = float(np.sqrt(np.mean(np.square(np.asarray(new_p)))))
+    np.testing.assert_allclose(rms, rho * eps2, rtol=1e-2)
+
+
+def test_adalomo_relative_step_pieces_match_fallback():
+    """Grouped-variant parity: relative_step=True must give the SAME params
+    on the fused per-layer path and the whole-segment fallback — RMS(p) is
+    computed per trailing matrix, so slicing layers off a stacked segment
+    cannot change the step scale."""
+    from repro.core import AdaLomoConfig
+    cfg = tiny_dense_cfg(ce_chunk=0)
+    model = get_family(cfg)
+    params = model.init(cfg, jax.random.PRNGKey(0))
+    batch = make_batch(cfg)
+    acfg = AdaLomoConfig(relative_step=True)
+    fused = make_runner(cfg, "adalomo", params=params,
+                        schedule=LRSchedule(0.1), adalomo=acfg)
+    generic = make_runner(cfg, "adalomo", params=params,
+                          schedule=LRSchedule(0.1), adalomo=acfg,
+                          loss_fn=model.loss_fn)
+    assert fused.strategy._fused and not generic.strategy._fused
+    np.testing.assert_allclose(float(fused.train_step(batch)),
+                               float(generic.train_step(batch)), atol=2e-5)
+    fm = flatten_with_paths(fused.state.opt_state)
+    gm = flatten_with_paths(generic.state.opt_state)
+    for path in fm:
+        np.testing.assert_allclose(np.asarray(fm[path]), np.asarray(gm[path]),
+                                   atol=1e-5, err_msg=path)
+
+
+def test_classic_adafactor_relative_step():
+    """The standalone optimizer exposes the same schedule (and actually uses
+    eps2 now); default stays absolute-lr so existing configs are unchanged."""
+    from repro.optim.adafactor import adafactor
+    k = jax.random.PRNGKey(0)
+    params = {"w": jax.random.normal(k, (16, 8)) * 0.1}
+    grads = {"w": jax.random.normal(jax.random.PRNGKey(1), (16, 8))}
+    opt = adafactor(relative_step=True)
+    state = opt.init(params)
+    new_params, _ = opt.update(grads, state, params, 0.1)
+    moved = np.abs(np.asarray(new_params["w"]) - np.asarray(params["w"]))
+    rms_p = float(np.sqrt(np.mean(np.square(np.asarray(params["w"])))))
+    # step RMS ~ rho * RMS(p) (clip keeps RMS(u) <= 1; first step saturates it)
+    np.testing.assert_allclose(float(np.sqrt(np.mean(moved ** 2))),
+                               0.1 * rms_p, rtol=0.05)
+    # absolute mode is unchanged by the new arguments
+    opt_abs = adafactor()
+    s2 = opt_abs.init(params)
+    p_abs, _ = opt_abs.update(grads, s2, params, 1e-3)
+    step_rms = float(np.sqrt(np.mean(
+        np.square(np.asarray(p_abs["w"]) - np.asarray(params["w"])))))
+    np.testing.assert_allclose(step_rms, 1e-3, rtol=0.05)
+
+
 def test_adalomo_grad_clip_runs_two_sweeps():
     """grad_clip > 0 adds the norm-only sweep; with a clip far above the
     actual norm the update must be unchanged."""

@@ -1,19 +1,32 @@
-"""Serving engine + generation smoke."""
+"""Serving engines: generation correctness, paged-cache bookkeeping,
+continuous batching vs the serial fixed-batch oracle, and the
+train→serve handoff."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from conftest import tiny_dense_cfg
+from repro.core.strategy import TrainState
 from repro.models import transformer as T
-from repro.serve.engine import ServeEngine
+from repro.serve.engine import ContinuousServeEngine, ServeEngine
+from repro.serve.kv_cache import BlockAllocator, PagedKVCache
+from repro.serve.scheduler import Scheduler, ServeRequest
+
+
+def _params(cfg, seed=0):
+    return T.init(cfg, jax.random.PRNGKey(seed))
+
+
+def _prompt(n, seed, vocab):
+    return jax.random.randint(jax.random.PRNGKey(seed), (n,), 0, vocab)
 
 
 def test_engine_generates_deterministically():
     cfg = tiny_dense_cfg()
-    params = T.init(cfg, jax.random.PRNGKey(0))
+    params = _params(cfg)
     e = ServeEngine(cfg, params, max_len=64, batch=2)
-    prompts = [jax.random.randint(jax.random.PRNGKey(i), (12,), 0, cfg.vocab)
-               for i in range(2)]
+    prompts = [_prompt(12, i, cfg.vocab) for i in range(2)]
     o1 = e.generate(prompts, max_new_tokens=8)
     o2 = e.generate(prompts, max_new_tokens=8)
     assert o1 == o2
@@ -23,9 +36,9 @@ def test_engine_generates_deterministically():
 def test_engine_matches_teacher_forcing():
     """Greedy engine tokens == argmax of full forward at each position."""
     cfg = tiny_dense_cfg()
-    params = T.init(cfg, jax.random.PRNGKey(0))
+    params = _params(cfg)
     e = ServeEngine(cfg, params, max_len=64, batch=1)
-    prompt = jax.random.randint(jax.random.PRNGKey(5), (10,), 0, cfg.vocab)
+    prompt = _prompt(10, 5, cfg.vocab)
     out = e.generate([prompt], max_new_tokens=4)[0]
     toks = jnp.asarray(prompt)
     for t_expected in out:
@@ -34,3 +47,155 @@ def test_engine_matches_teacher_forcing():
         nxt = int(jnp.argmax(logits[0, -1]))
         assert nxt == t_expected
         toks = jnp.concatenate([toks, jnp.asarray([nxt], jnp.int32)])
+
+
+def test_mixed_length_batch_matches_teacher_forcing():
+    """Left-pad satellite: a SHORT prompt batched with a long one must decode
+    exactly like its solo teacher-forced run — pad keys are masked, so the
+    junk in the padded region cannot leak into attention."""
+    cfg = tiny_dense_cfg()
+    params = _params(cfg)
+    e = ServeEngine(cfg, params, max_len=64, batch=2)
+    short, long_ = _prompt(4, 1, cfg.vocab), _prompt(14, 2, cfg.vocab)
+    out = e.generate([short, long_], max_new_tokens=5)
+    for prompt, got in zip((short, long_), out):
+        toks = jnp.asarray(prompt)
+        for t_expected in got:
+            logits = T.apply(cfg, params, {"tokens": toks[None]},
+                             compute_dtype=jnp.float32)
+            nxt = int(jnp.argmax(logits[0, -1]))
+            assert nxt == t_expected
+            toks = jnp.concatenate([toks, jnp.asarray([nxt], jnp.int32)])
+
+
+# ------------------------------------------------------------- paged cache
+
+def test_block_allocator_free_list():
+    a = BlockAllocator(8)          # 7 usable, page 0 reserved
+    assert a.n_usable == 7
+    got = a.alloc(3)
+    assert got is not None and len(got) == 3 and 0 not in got
+    assert a.alloc(5) is None      # only 4 left: atomic failure
+    assert a.n_free == 4
+    a.free(got)
+    assert a.n_free == 7
+    with pytest.raises(ValueError):
+        a.free([0])
+    b = a.alloc(1)
+    with pytest.raises(ValueError):
+        a.free(b + b)              # double free
+
+
+def test_paged_cache_admission_and_roundtrip():
+    cfg = tiny_dense_cfg()
+    cache = PagedKVCache(cfg, n_blocks=7, block_size=8, slots=2,
+                         max_blocks_per_slot=4)
+    assert cache.admit(0, budget_tokens=17)     # 3 pages
+    assert cache.occupancy() == pytest.approx(3 / 6)
+    # pool exhausted for a 4-page request, fits after release
+    assert not cache.admit(1, budget_tokens=31)
+    # a request wider than the slot's table is rejected outright
+    assert not cache.admit(1, budget_tokens=100)
+    rng = jax.random.PRNGKey(0)
+    k = jax.random.normal(rng, (cfg.n_layers, 17, cfg.kv_heads, cfg.head_dim))
+    v = k * 0.5
+    cache.write_prefill(0, k, v, pad=2)
+    assert int(cache.lengths[0]) == 17 and int(cache.pads[0]) == 2
+    gk, gv = cache.gather_contiguous(0)
+    np.testing.assert_allclose(np.asarray(gk[:, :17]), np.asarray(k), atol=0)
+    np.testing.assert_allclose(np.asarray(gv[:, :17]), np.asarray(v), atol=0)
+    cache.release(0)
+    assert cache.occupancy() == 0.0
+    assert cache.admit(1, budget_tokens=31)     # 4 pages fit now
+
+
+def test_scheduler_budget_and_refill_bookkeeping():
+    s = Scheduler(slots=2)
+    for i in range(4):
+        s.submit(ServeRequest(prompt=[1, 2, 3], max_new_tokens=2))
+    placed = s.fill(lambda slot, req: True)
+    assert len(placed) == 2 and s.n_active == 2
+    # both finish after 2 tokens; refill happens mid-decode
+    assert s.step_tokens([7, 7]) == []
+    assert s.step_tokens([7, 7]) == [0, 1]
+    placed = s.fill(lambda slot, req: True)
+    assert len(placed) == 2
+    assert s.stats.n_refills == 2 and s.stats.n_finished == 2
+    # admission bounce leaves the queue intact (FIFO preserved)
+    s2 = Scheduler(slots=1)
+    s2.submit(ServeRequest(prompt=[1], max_new_tokens=1))
+    assert s2.fill(lambda slot, req: False) == []
+    assert s2.stats.n_deferred == 1 and len(s2.queue) == 1
+
+
+# ------------------------------------------------- continuous batching
+
+def test_continuous_matches_serial_token_for_token():
+    """Acceptance bar: the continuous-batching engine reproduces the serial
+    fixed-batch engine's greedy tokens exactly on a mixed-length trace, with
+    more requests than slots so mid-decode refill is exercised."""
+    cfg = tiny_dense_cfg()
+    params = _params(cfg)
+    plens = [5, 12, 9, 3, 14, 7, 11]
+    max_news = [6, 3, 8, 1, 5, 7, 4]
+    prompts = [_prompt(n, 10 + i, cfg.vocab) for i, n in enumerate(plens)]
+
+    serial_engine = ServeEngine(cfg, params, max_len=64, batch=1)
+    serial = [serial_engine.generate([p], m)[0]
+              for p, m in zip(prompts, max_news)]
+
+    eng = ContinuousServeEngine(cfg, params, slots=3, block_size=8,
+                                prefill_bucket=16)
+    reqs = [ServeRequest(prompt=list(map(int, p)), max_new_tokens=m)
+            for p, m in zip(prompts, max_news)]
+    eng.run(reqs)
+    for req, expect in zip(reqs, serial):
+        assert req.out_tokens == expect, req.rid
+    stats = eng.scheduler.stats
+    assert stats.n_finished == len(prompts)
+    assert stats.n_refills > 0          # slots were reused mid-decode
+    assert stats.peak_active == 3       # the batch actually filled
+    assert eng.cache.occupancy() == 0.0  # every page returned
+
+
+def test_continuous_eos_stops_early():
+    """A request with eos_id set to a token the model will emit stops there;
+    the freed slot and pages are reused."""
+    cfg = tiny_dense_cfg()
+    params = _params(cfg)
+    prompt = _prompt(6, 3, cfg.vocab)
+    probe = ContinuousServeEngine(cfg, params, slots=1, block_size=8)
+    r0 = ServeRequest(prompt=list(map(int, prompt)), max_new_tokens=6)
+    probe.run([r0])
+    assert len(r0.out_tokens) == 6
+    eos = r0.out_tokens[2]              # a token the greedy path emits
+
+    eng = ContinuousServeEngine(cfg, params, slots=1, block_size=8)
+    r1 = ServeRequest(prompt=list(map(int, prompt)), max_new_tokens=6,
+                      eos_id=eos)
+    eng.run([r1])
+    # truncated at the FIRST occurrence of the eos token
+    cut = r0.out_tokens.index(eos) + 1
+    assert r1.out_tokens == r0.out_tokens[:cut]
+    assert r1.done and eng.cache.occupancy() == 0.0
+
+
+def test_from_train_state_handoff():
+    """One-call handoff: params inside a TrainState serve identically to the
+    bare-param engine."""
+    cfg = tiny_dense_cfg()
+    params = _params(cfg)
+    state = TrainState(params=params, opt_state={}, step=7)
+    prompts = [_prompt(8, i, cfg.vocab) for i in range(2)]
+    a = ServeEngine(cfg, params, max_len=64, batch=2).generate(prompts, 5)
+    b = ServeEngine.from_train_state(cfg, state, max_len=64,
+                                     batch=2).generate(prompts, 5)
+    assert a == b
+    ceng = ContinuousServeEngine.from_train_state(cfg, state, slots=2,
+                                                  block_size=8)
+    reqs = [ServeRequest(prompt=list(map(int, p)), max_new_tokens=5)
+            for p in prompts]
+    ceng.run(reqs)
+    serial = [ServeEngine(cfg, params, max_len=64, batch=1).generate([p], 5)[0]
+              for p in prompts]
+    assert [r.out_tokens for r in reqs] == serial

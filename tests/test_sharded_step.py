@@ -128,3 +128,12 @@ def test_sharded_adalomo_matches_unsharded(worker_out):
 def test_sharded_state_checkpoint_roundtrip(worker_out):
     dparams, dopt = worker_out["ckpt"]
     assert dparams == 0.0 and dopt == 0.0, (dparams, dopt)
+
+
+def test_sharded_train_to_serve_handoff(worker_out):
+    # ServeEngine.from_train_state on a 2x2-mesh TrainState: greedy tokens
+    # must match the unsharded engine on the gathered params, and the state
+    # handed over must actually have had sharded leaves
+    tokens_match, was_sharded = worker_out["serve_handoff"]
+    assert was_sharded == 1
+    assert tokens_match == 1
