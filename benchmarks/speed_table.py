@@ -176,6 +176,32 @@ def run(csv=True, quick=False, out=None, reps=3):
     if not quick:
         bench("mezo", "adamw", warmup=2)
 
+    # cross-pod reduce: exact fp32 wire vs int8 error-feedback wire, same
+    # fpft step (docs/sharding.md "Cross-pod data parallelism").  On one
+    # host both pods are emulated, so step_ms measures the quantize/
+    # dequantize overhead; wire_bytes is the per-step DCI traffic a real
+    # multi-pod job would move either way.
+    from repro.core import CrossPodConfig
+    from repro.dist.compress import wire_bytes
+    pods = 2
+    for compressed in (False, True):
+        r = make_runner(cfg, "fpft", params=params, optimizer="sgd",
+                        schedule=sched,
+                        cross_pod=CrossPodConfig(pods=pods,
+                                                 compress=compressed))
+        t = _time_steps(r, batch, n=5 if quick else 10, warmup=2, reps=reps)
+        wire = pods * wire_bytes(params, compressed=compressed)
+        label = "int8_ef" if compressed else "exact"
+        rows.append({"strategy": "fpft", "optimizer": "sgd",
+                     "pipelined": False, "fused": False, "mesh": None,
+                     "crosspod": {"pods": pods, "wire": label,
+                                  "wire_bytes_per_step": wire},
+                     "step_ms": round(t * 1e3, 3),
+                     "steps_per_s": round(1 / t, 2)})
+        if csv:
+            print(f"speed_table/fpft-crosspod.{label}/sgd,{t*1e6:.0f},"
+                  f"wire_bytes={wire}")
+
     if out:
         doc = {
             "bench": "speed_table",

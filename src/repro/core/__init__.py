@@ -4,11 +4,13 @@ from repro.core.scheduler import LRSchedule
 from repro.core.pipeline import BundlePipeline, PipelineStats
 from repro.core.strategy import (TrainState, Strategy, Runner,
                                  HiFTConfig, LiSAConfig, MeZOConfig,
-                                 LOMOConfig, AdaLomoConfig, HiFTStrategy,
+                                 LOMOConfig, AdaLomoConfig, CrossPodConfig,
+                                 HiFTStrategy,
                                  FPFTStrategy, LiSAStrategy, MeZOStrategy,
                                  LOMOStrategy, AdaLomoStrategy,
                                  PipelinedHiFTStrategy,
                                  build_fpft_step, fpft_step_body,
+                                 fpft_crosspod_step_body, crosspod_reduce,
                                  lomo_step_body, adalomo_step_body,
                                  adalomo_init_opt_state, lomo_pieces_of,
                                  write_back, host_put, device_put_async)

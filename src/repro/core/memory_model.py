@@ -41,7 +41,8 @@ class MemoryReport:
     para_mb: float          # resident weights (#Para)
     grad_mb: float          # gradients (#Gra)
     state_mb: float         # optimizer states (#Sta)
-    pgs_gb: float           # #PGS = para + grad + state
+    pgs_gb: float           # #PGS = para + grad + state (+ EF residuals)
+    ef_mb: float = 0.0      # cross-pod EF residuals (0 unless ef_pods >= 2)
 
     def as_row(self) -> str:
         return (f"{self.n_params/1e6:9.2f}M {self.peak_trainable/1e6:9.2f}M "
@@ -95,10 +96,16 @@ class _Accountant:
 
 
 def analyze(shapes: PyTree, units: Sequence[Unit], *, optimizer: str = "adamw",
-            precision: str = "fp32", mode: str = "hift", m: int = 1) -> MemoryReport:
+            precision: str = "fp32", mode: str = "hift", m: int = 1,
+            ef_pods: int = 0) -> MemoryReport:
     """shapes: params tree or jax.eval_shape(init) tree.
     precision: fp32 | mixed | mixed_hi.
     mode: fpft | hift | hift_pipelined | mezo | lomo | adalomo.
+    ef_pods >= 2: price the compressed cross-pod reduce's error-feedback
+    residual tree — one fp32 copy of whatever gradient tree crosses the
+    wire, PER POD (fpft: the full tree; hift modes: the active group,
+    riding the bundle, so the pipelined schedule holds two).  Only the
+    gradient-reduce strategies (fpft / hift modes) support compression.
 
     Per-mode accounting (matching the registry strategies' own
     ``peak_trainable_params`` / ``peak_grad_params``):
@@ -184,10 +191,21 @@ def analyze(shapes: PyTree, units: Sequence[Unit], *, optimizer: str = "adamw",
         state = int(_STATE_MULT[optimizer] * 4 * peak * resident_bundles) \
             if mode in hift_modes else int(_STATE_MULT[optimizer] * 4 * n)
 
+    ef = 0
+    if ef_pods and ef_pods >= 2:
+        if mode == "fpft":
+            ef = 4 * ef_pods * n
+        elif mode in hift_modes:
+            ef = 4 * ef_pods * peak * resident_bundles
+        else:
+            raise ValueError(
+                f"ef_pods: mode {mode!r} has no gradient tree to compress "
+                "(cross-pod EF applies to fpft / hift modes)")
+
     return MemoryReport(
         n_params=n, peak_trainable=peak,
         para_mb=para / 2**20, grad_mb=grad / 2**20, state_mb=state / 2**20,
-        pgs_gb=(para + grad + state) / 2**30,
+        pgs_gb=(para + grad + state + ef) / 2**30, ef_mb=ef / 2**20,
     )
 
 

@@ -71,6 +71,7 @@ import numpy as np
 from repro.common.pytree import tree_cast, tree_size
 from repro.dist import ctx as dist_ctx
 from repro.dist import shardings as dist_shardings
+from repro.dist.compress import compress_tree_with_feedback, init_residuals
 from repro.core.grouping import (Group, group_cut, make_groups, merge_params,
                                  order_groups, split_params)
 from repro.core.pipeline import BundlePipeline, device_put_async, host_put
@@ -166,6 +167,64 @@ class AdaLomoConfig:
                                       # per trailing matrix (matrix_rms), so
                                       # fused and fallback paths agree
     eps2: float = 1e-3                # relative-step LR floor
+
+
+@dataclasses.dataclass
+class CrossPodConfig:
+    """Cross-pod data parallelism: the global batch splits into ``pods``
+    equal chunks whose partial gradients are reduced into one update.  With
+    ``compress`` on, each pod's partial passes through the int8
+    error-feedback quantizer (``repro.dist.compress``) before the reduce —
+    4x fewer bytes on the slow DCI wire — and the per-pod fp32 residuals
+    become training state (FPFT: ``extra["ef_residual"]``; grouped
+    strategies: the active group's bundle under ``"ef"``), so they
+    checkpoint, offload and conformance-test like everything else."""
+    pods: int = 2
+    compress: bool = True
+
+
+def crosspod_reduce(loss_and_grad: Callable, params: PyTree, batch,
+                    residuals: PyTree, cross_pod: CrossPodConfig):
+    """Cross-pod data-parallel gradient reduce with optional int8
+    error-feedback compression on the wire.
+
+    The batch splits into ``pods`` equal leading-dim chunks — one per pod —
+    and a ``lax.scan`` computes each pod's partial gradient in turn, so only
+    ONE pod's gradient tree is ever live (the per-process liveness a real
+    multi-pod launch has).  With ``compress`` on each partial round-trips
+    through ``dist.compress`` before entering the sum: what crosses the scan
+    carry is exactly what would cross the DCI wire (int8 payload + per-leaf
+    scale), and pod i's fp32 residual — slice i of the stacked ``residuals``
+    tree — feeds back into its next quantization (EF-SGD).  Returns
+    ``(grads, new_residuals, mean_loss)``; with ``compress=False`` this is
+    plain chunked gradient accumulation, matching the single-reduce step up
+    to fp reassociation."""
+    pods = cross_pod.pods
+
+    def chunk(x):
+        if x.shape[0] % pods:
+            raise ValueError(
+                f"cross-pod reduce needs a batch divisible by pods={pods}; "
+                f"got leading dim {x.shape[0]}")
+        return x.reshape((pods, x.shape[0] // pods) + x.shape[1:])
+
+    pod_batch = jax.tree.map(chunk, batch)
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def body(carry, xs):
+        g_acc, l_acc = carry
+        b, r = xs
+        loss, g = loss_and_grad(b)
+        if cross_pod.compress:
+            g, r = compress_tree_with_feedback(g, r)
+        g_acc = jax.tree.map(lambda a, x: a + x.astype(jnp.float32), g_acc, g)
+        return (g_acc, l_acc + loss.astype(jnp.float32)), r
+
+    (g_sum, l_sum), new_res = jax.lax.scan(
+        body, (zeros, jnp.zeros((), jnp.float32)), (pod_batch, residuals))
+    grads = jax.tree.map(lambda g, p: (g / pods).astype(p.dtype),
+                         g_sum, params)
+    return grads, new_res, l_sum / pods
 
 
 # -------------------------------------------------------------- TrainState
@@ -267,11 +326,17 @@ class Strategy:
     # against peak_trainable_params / peak_grad_params)
     memory_mode = "fpft"
     memory_m = 1
+    # declaration the conformance battery keys its cross-pod case on: True
+    # for strategies whose step accepts a CrossPodConfig (gradient-based
+    # strategies with a whole-tree reduce point); the fused-backward and
+    # zeroth-order families have no gradient tree to compress
+    supports_cross_pod = False
 
     def __init__(self, cfg, optimizer: Optional[Optimizer], *,
                  schedule: Optional[LRSchedule] = None, policy: Policy = FP32,
                  loss_fn: Optional[Callable] = None, mesh=None,
-                 param_sharding_fn: Optional[Callable] = None):
+                 param_sharding_fn: Optional[Callable] = None,
+                 cross_pod: Optional[CrossPodConfig] = None):
         self.cfg = cfg
         self.model = get_family(cfg)
         self.optimizer = optimizer
@@ -280,6 +345,10 @@ class Strategy:
         self.loss_fn = loss_fn or self.model.loss_fn
         self.mesh = mesh
         self.param_sharding_fn = param_sharding_fn
+        if cross_pod is not None and not self.supports_cross_pod:
+            raise ValueError(
+                f"strategy {self.name!r} does not support cross_pod")
+        self.cross_pod = cross_pod
 
     # ------------------------------------------------------------ sharding
 
@@ -309,12 +378,40 @@ class Strategy:
         instead of an every-step all-gather."""
         return self.param_shardings(tree)
 
+    @property
+    def _cross_pod_on(self) -> bool:
+        return self.cross_pod is not None and self.cross_pod.pods > 1
+
     def place_params(self, params: PyTree) -> PyTree:
         """Commit a param tree onto its resident placement (no-op
         unsharded)."""
         if not self.sharded:
             return params
         return jax.device_put(params, self.resident_param_shardings(params))
+
+    def _opt_state_placement(self, opt_state: PyTree,
+                             params: PyTree) -> PyTree:
+        """Resident placement of ``opt_state`` (what ``init`` gives it)."""
+        return dist_shardings.opt_state_shardings(opt_state, params,
+                                                  self.mesh)
+
+    def place_state(self, state: TrainState) -> TrainState:
+        """Commit a host-resident TrainState onto this strategy's resident
+        placement — the landing pad of elastic resize (``dist.elastic``):
+        params go to their resident shardings, optimizer state to the same
+        placement ``init`` would give it.  ``extra`` stays host-resident
+        (visit orders and rng are host state; FPFT's EF residual tree is
+        re-placed by the first step's ``device_put``).  Grouped strategies
+        override to place params only — their bundles live on host between
+        steps anyway."""
+        if not self.sharded:
+            return state
+        params = self.place_params(state.params)
+        opt_state = state.opt_state
+        if opt_state and jax.tree.leaves(opt_state):
+            opt_state = jax.device_put(
+                opt_state, self._opt_state_placement(opt_state, params))
+        return state.replace(params=params, opt_state=opt_state)
 
     def _trace_ctx(self):
         """Context the jitted steps are traced/called under: activates the
@@ -369,9 +466,18 @@ class _GroupedStrategy(Strategy):
     use_cut = True
     offload_optimizer = True
     memory_mode = "hift"
+    supports_cross_pod = True
 
     def resident_param_shardings(self, tree: PyTree) -> PyTree:
         return dist_shardings.replicated(tree, self.mesh)
+
+    def place_state(self, state: TrainState) -> TrainState:
+        # bundles live host-side between steps (offload) and the per-step
+        # device_put moves them in regardless — only the params need the
+        # resident (replicated) placement restored after a resize
+        if not self.sharded:
+            return state
+        return state.replace(params=self.place_params(state.params))
 
     def _setup_groups(self, m: int) -> None:
         self.units = self.model.unit_spec(self.cfg)
@@ -418,11 +524,18 @@ class _GroupedStrategy(Strategy):
         return group_cut(self.cfg, group, unit_first_depth)
 
     def _init_bundle(self, active: PyTree) -> PyTree:
-        """Optimizer-state bundle for a group (created on first visit)."""
+        """Optimizer-state bundle for a group (created on first visit).
+        Under a compressed cross-pod reduce the group's per-pod EF residuals
+        ride in the bundle (key ``"ef"``, stacked pods-leading fp32) so host
+        offload, pipelining and checkpointing cover them for free."""
         if self.policy.master_active_group_only:
             master = tree_cast(active, jnp.float32)
-            return {"opt": self.optimizer.init(master), "master": master}
-        return {"opt": self.optimizer.init(active)}
+            bundle = {"opt": self.optimizer.init(master), "master": master}
+        else:
+            bundle = {"opt": self.optimizer.init(active)}
+        if self._cross_pod_on and self.cross_pod.compress:
+            bundle["ef"] = init_residuals(active, self.cross_pod.pods)
+        return bundle
 
     def build_step(self, gi: int, example=None) -> tuple[Callable, Any]:
         """The jitted per-group train step (k of these exist).
@@ -438,21 +551,30 @@ class _GroupedStrategy(Strategy):
         cut = self._cut(group)
         cfg, opt, policy = self.cfg, self.optimizer, self.policy
         loss_fn = self.loss_fn
+        cp = self.cross_pod if self._cross_pod_on else None
 
         def step(active, frozen, bundle, batch, lr):
-            def loss_of(a):
+            def loss_of(a, mb):
                 full = merge_params(a, frozen, group)
-                return loss_fn(cfg, full, batch, cut=cut,
+                return loss_fn(cfg, full, mb, cut=cut,
                                compute_dtype=policy.compute_dtype)
 
-            loss, grads = jax.value_and_grad(loss_of)(active)
+            if cp is not None:
+                grads, new_res, loss = crosspod_reduce(
+                    lambda mb: jax.value_and_grad(loss_of)(active, mb),
+                    active, batch, bundle.get("ef", {}), cp)
+                ef = {"ef": new_res} if "ef" in bundle else {}
+            else:
+                loss, grads = jax.value_and_grad(loss_of)(active, batch)
+                ef = {}
             if policy.master_active_group_only:
                 master, st = bundle["master"], bundle["opt"]
                 new_master, new_st = opt.update(grads, st, master, lr)
                 new_active = tree_cast(new_master, policy.param_dtype)
-                return new_active, {"opt": new_st, "master": new_master}, loss
+                return new_active, {"opt": new_st, "master": new_master,
+                                    **ef}, loss
             new_active, new_st = opt.update(grads, bundle["opt"], active, lr)
-            return new_active, {"opt": new_st}, loss
+            return new_active, {"opt": new_st, **ef}, loss
 
         if self.sharded and example is not None:
             ins, outs = dist_shardings.group_step_shardings(
@@ -565,10 +687,12 @@ class HiFTStrategy(_GroupedStrategy):
     def __init__(self, cfg, optimizer, *, hift: Optional[HiFTConfig] = None,
                  schedule: Optional[LRSchedule] = None, policy: Policy = FP32,
                  loss_fn: Optional[Callable] = None, mesh=None,
-                 param_sharding_fn: Optional[Callable] = None):
+                 param_sharding_fn: Optional[Callable] = None,
+                 cross_pod: Optional[CrossPodConfig] = None):
         super().__init__(cfg, optimizer, schedule=schedule, policy=policy,
                          loss_fn=loss_fn, mesh=mesh,
-                         param_sharding_fn=param_sharding_fn)
+                         param_sharding_fn=param_sharding_fn,
+                         cross_pod=cross_pod)
         self.hift = hift if hift is not None else HiFTConfig()
         self.use_cut = self.hift.use_cut
         self.offload_optimizer = self.hift.offload_optimizer
@@ -647,10 +771,12 @@ class LiSAStrategy(_GroupedStrategy):
     def __init__(self, cfg, optimizer, *, lisa: Optional[LiSAConfig] = None,
                  schedule: Optional[LRSchedule] = None, policy: Policy = FP32,
                  loss_fn: Optional[Callable] = None, mesh=None,
-                 param_sharding_fn: Optional[Callable] = None):
+                 param_sharding_fn: Optional[Callable] = None,
+                 cross_pod: Optional[CrossPodConfig] = None):
         super().__init__(cfg, optimizer, schedule=schedule, policy=policy,
                          loss_fn=loss_fn, mesh=mesh,
-                         param_sharding_fn=param_sharding_fn)
+                         param_sharding_fn=param_sharding_fn,
+                         cross_pod=cross_pod)
         self.lisa = lisa if lisa is not None else LiSAConfig()
         self.use_cut = self.lisa.use_cut
         self.offload_optimizer = self.lisa.offload_optimizer
@@ -710,6 +836,33 @@ def fpft_step_body(cfg, optimizer: Optimizer, policy: Policy = FP32,
     return step
 
 
+def fpft_crosspod_step_body(cfg, optimizer: Optimizer, policy: Policy = FP32,
+                            loss_fn: Optional[Callable] = None,
+                            cross_pod: Optional[CrossPodConfig] = None
+                            ) -> Callable:
+    """The full-parameter step with the cross-pod reduce in the gradient
+    path: ``step(params, opt_state, residuals, batch, lr) -> (new_params,
+    new_opt_state, new_residuals, loss)``.  ``residuals`` is the stacked
+    per-pod EF tree from ``dist.compress.init_residuals(params, pods)``
+    (``{}`` when compression is off — the same body serves both)."""
+    model = get_family(cfg)
+    loss_fn = loss_fn or model.loss_fn
+    cp = cross_pod if cross_pod is not None else CrossPodConfig()
+
+    def step(params, opt_state, residuals, batch, lr):
+        def loss_and_grad(b):
+            return jax.value_and_grad(
+                lambda p: loss_fn(cfg, p, b,
+                                  compute_dtype=policy.compute_dtype))(params)
+
+        grads, new_res, loss = crosspod_reduce(loss_and_grad, params, batch,
+                                               residuals, cp)
+        new_params, new_state = optimizer.update(grads, opt_state, params, lr)
+        return new_params, new_state, new_res, loss
+
+    return step
+
+
 def build_fpft_step(cfg, optimizer: Optimizer, policy: Policy = FP32,
                     loss_fn: Optional[Callable] = None) -> Callable:
     """Returns jitted ``step(params, opt_state, batch, lr) ->
@@ -724,13 +877,16 @@ class FPFTStrategy(Strategy):
     """Standard full-parameter fine-tuning — the paper's baseline."""
 
     name = "fpft"
+    supports_cross_pod = True
 
     def __init__(self, cfg, optimizer, *, schedule: Optional[LRSchedule] = None,
                  policy: Policy = FP32, loss_fn: Optional[Callable] = None,
-                 mesh=None, param_sharding_fn: Optional[Callable] = None):
+                 mesh=None, param_sharding_fn: Optional[Callable] = None,
+                 cross_pod: Optional[CrossPodConfig] = None):
         super().__init__(cfg, optimizer, schedule=schedule, policy=policy,
                          loss_fn=loss_fn, mesh=mesh,
-                         param_sharding_fn=param_sharding_fn)
+                         param_sharding_fn=param_sharding_fn,
+                         cross_pod=cross_pod)
         self._step_fn: Optional[tuple[Callable, Any]] = None
 
     def init(self, params: PyTree, rng=None) -> TrainState:
@@ -743,15 +899,35 @@ class FPFTStrategy(Strategy):
                 opt_state,
                 dist_shardings.opt_state_shardings(opt_state, params,
                                                    self.mesh))
-        return TrainState(params, opt_state, 0, {})
+        extra = {}
+        if self._cross_pod_on and self.cross_pod.compress:
+            # per-pod EF residuals are training state: they checkpoint (and
+            # elastic-resize) with everything else
+            extra = {"ef_residual": init_residuals(params,
+                                                   self.cross_pod.pods)}
+        return TrainState(params, opt_state, 0, extra)
 
     def _fn(self, example=None) -> tuple[Callable, Any]:
         if self._step_fn is None:
-            if self.sharded and example is not None:
+            donate = () if jax.devices()[0].platform == "cpu" else (0, 1)
+            if self._cross_pod_on:
+                body = fpft_crosspod_step_body(self.cfg, self.optimizer,
+                                               self.policy, self.loss_fn,
+                                               self.cross_pod)
+                donate = donate and donate + (2,)  # residuals update in place
+                if self.sharded and example is not None:
+                    ins, outs = dist_shardings.fpft_crosspod_step_shardings(
+                        self.mesh, *example,
+                        param_shardings_tree=self.param_shardings(example[0]))
+                    self._step_fn = jax.jit(body, donate_argnums=donate,
+                                            in_shardings=ins,
+                                            out_shardings=outs), ins
+                else:
+                    self._step_fn = jax.jit(body, donate_argnums=donate), None
+            elif self.sharded and example is not None:
                 ins, outs = dist_shardings.fpft_step_shardings(
                     self.mesh, *example,
                     param_shardings_tree=self.param_shardings(example[0]))
-                donate = () if jax.devices()[0].platform == "cpu" else (0, 1)
                 fn = jax.jit(fpft_step_body(self.cfg, self.optimizer,
                                             self.policy, self.loss_fn),
                              donate_argnums=donate, in_shardings=ins,
@@ -765,6 +941,21 @@ class FPFTStrategy(Strategy):
     def step(self, state: TrainState, batch) -> tuple[TrainState, Metrics]:
         step = int(state.step)
         lr = self.schedule.at_cycle(step)
+        if self._cross_pod_on:
+            residuals = (state.extra or {}).get("ef_residual", {})
+            with self._trace_ctx():
+                fn, ins = self._fn((state.params, state.opt_state, residuals,
+                                    batch))
+                args = (state.params, state.opt_state, residuals, batch)
+                if ins is not None:
+                    args = jax.device_put(args, ins[:4])
+                params, opt_state, new_res, loss = fn(
+                    *args, jnp.asarray(lr, jnp.float32))
+            extra = dict(state.extra or {})
+            if self.cross_pod.compress:
+                extra["ef_residual"] = new_res
+            new_state = TrainState(params, opt_state, step + 1, extra)
+            return new_state, {"loss": loss, "lr": lr, "strategy": self.name}
         with self._trace_ctx():
             fn, ins = self._fn((state.params, state.opt_state, batch))
             args = (state.params, state.opt_state, batch)

@@ -7,7 +7,9 @@
                   / decode caches on the production (data, model) meshes.
 - ``compress``  : int8 quantization with error feedback for cross-pod
                   gradient reduction over DCI.
+- ``elastic``   : TrainState resize onto a different mesh shape (the path
+                  behind ``checkpoint.restore_state(..., mesh=...)``).
 """
-from repro.dist import compress, ctx, shardings
+from repro.dist import compress, ctx, elastic, shardings
 
-__all__ = ["compress", "ctx", "shardings"]
+__all__ = ["compress", "ctx", "elastic", "shardings"]

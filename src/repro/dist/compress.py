@@ -5,7 +5,12 @@ than ICI; symmetric per-tensor int8 cuts the wire bytes 4x.  Plain
 quantization biases the update, so the quantization error is carried as a
 per-pod *residual* and added back before the next quantization — over time
 the dequantized stream sums to the true gradient stream (error feedback /
-EF-SGD), which ``tests/test_properties.py`` asserts exactly.
+EF-SGD), which ``tests/test_compress_properties.py`` asserts exactly.
+
+The residual is always fp32 regardless of gradient dtype (a bf16 residual
+would itself lose the bits error feedback exists to carry); the dequantized
+gradient comes back in the *input* dtype so a bf16 training step stays bf16
+end to end.
 """
 from __future__ import annotations
 
@@ -26,20 +31,63 @@ def quantize_int8(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
     return q.astype(jnp.int8), scale
 
 
-def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
-    return q.astype(jnp.float32) * scale
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray,
+                    dtype: jnp.dtype = jnp.float32) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
 
 
 def compress_with_feedback(g: jnp.ndarray, residual: jnp.ndarray
                            ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Quantize ``g + residual``; the new residual is what int8 could not
-    represent.  Returns ``(q, scale, new_residual)``."""
-    acc = g.astype(jnp.float32) + residual
+    represent.  Returns ``(q, scale, new_residual)`` with the residual kept
+    fp32 — the error-feedback accumulation must not round in g's dtype."""
+    acc = g.astype(jnp.float32) + residual.astype(jnp.float32)
     q, scale = quantize_int8(acc)
     new_residual = acc - dequantize_int8(q, scale)
     return q, scale, new_residual
 
 
-def init_residuals(tree: PyTree) -> PyTree:
-    """Zero error-feedback residuals shaped like a gradient tree."""
-    return jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), tree)
+def compress_decompress(g: jnp.ndarray, residual: jnp.ndarray
+                        ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """One EF round-trip: what the far side of the wire reconstructs, plus
+    the residual to carry.  The reconstruction is returned in ``g.dtype``
+    so a bf16 gradient tree stays bf16 through the reduce."""
+    q, scale, new_residual = compress_with_feedback(g, residual)
+    return dequantize_int8(q, scale, g.dtype), new_residual
+
+
+def compress_tree_with_feedback(grads: PyTree, residuals: PyTree
+                                ) -> tuple[PyTree, PyTree]:
+    """EF-compress a whole gradient tree leaf-by-leaf.  Returns
+    ``(ghat, new_residuals)``: ghat in each leaf's input dtype (what the
+    all-reduce sees), residuals fp32."""
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = treedef.flatten_up_to(residuals)
+    out = [compress_decompress(g, r) for g, r in zip(flat_g, flat_r)]
+    ghat = treedef.unflatten([o[0] for o in out])
+    new_res = treedef.unflatten([o[1] for o in out])
+    return ghat, new_res
+
+
+def init_residuals(tree: PyTree, pods: int | None = None) -> PyTree:
+    """Zero error-feedback residuals shaped like a gradient tree.
+
+    With ``pods=N`` each leaf gains a leading pods axis — the stacked
+    per-pod residual layout the cross-pod scan carries (pod i owns
+    slice i; one residual tree per independent quantizer)."""
+    def zero(x):
+        shape = x.shape if pods is None else (pods,) + tuple(x.shape)
+        return jnp.zeros(shape, jnp.float32)
+    return jax.tree.map(zero, tree)
+
+
+def wire_bytes(tree: PyTree, compressed: bool) -> int:
+    """Bytes one pod puts on the DCI wire per reduce of ``tree``:
+    fp32 leaves exact, or int8 payload + one fp32 scale per leaf."""
+    total = 0
+    for x in jax.tree.leaves(tree):
+        n = 1
+        for d in x.shape:
+            n *= d
+        total += (n + 4) if compressed else 4 * n
+    return total

@@ -1,0 +1,65 @@
+"""Elastic TrainState resize: restore any state onto a different mesh.
+
+A checkpoint is mesh-independent by construction (``train.checkpoint``
+snapshots every leaf to host numpy before serializing), but a LIVE state —
+or a freshly-restored one headed for a different pod shape — still carries
+placement.  :func:`resize_state` is the one move: gather every leaf to host,
+then commit the tree onto the TARGET layout, either through a strategy built
+for the new mesh (full resident placement: params, optimizer moments,
+AdaLomo's factored stats, FPFT's EF residuals — exactly what that
+strategy's ``init`` would produce) or through a bare mesh (params take the
+structural rule; everything else stays host until the first step's
+``device_put`` completes the move).
+
+This is the path behind ``checkpoint.restore_state(..., mesh=new_mesh)`` /
+``restore_state(..., strategy=new_strategy)``: train 3 steps on a 2x2 mesh,
+restore onto 1x4 or 4x1, keep training — the HiFT queue position, per-group
+bundles and optimizer moments all survive because they are ordinary
+TrainState leaves (``tests/test_elastic.py`` holds the round-trip to the
+uninterrupted run's losses).
+
+Single-controller caveat: the gather uses ``np.asarray`` per leaf, which
+needs every shard addressable from this process.  In a multi-process job,
+checkpoint on the old mesh and restore on the new one instead — the
+checkpoint codec's host snapshot IS the gather.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+
+def gather_to_host(tree: PyTree) -> PyTree:
+    """All-gather every leaf to host numpy — the mesh-independent form."""
+    return jax.tree.map(lambda x: np.asarray(x), tree)
+
+
+def resize_state(state, *, strategy=None, mesh=None):
+    """Re-place ``state`` (a ``TrainState``) for a new mesh shape.
+
+    Exactly one of ``strategy`` / ``mesh`` is normally given:
+
+    - ``strategy``: a Strategy instance constructed for the TARGET mesh;
+      the state lands on that strategy's full resident placement
+      (``Strategy.place_state``) and can be stepped immediately.
+    - ``mesh``: params go to the structural rule
+      (``dist.shardings.param_shardings``); optimizer state and extras stay
+      host-resident (the first step's ``device_put`` moves them).
+
+    With neither, the state is simply gathered to host (a no-mesh
+    restore)."""
+    from repro.core.strategy import TrainState
+    from repro.dist import shardings as dist_shardings
+
+    host = TrainState.from_tree(gather_to_host(state.to_tree()))
+    if strategy is not None:
+        return strategy.place_state(host)
+    if mesh is not None and mesh.size > 1:
+        params = jax.device_put(
+            host.params, dist_shardings.param_shardings(host.params, mesh))
+        return host.replace(params=params)
+    return host

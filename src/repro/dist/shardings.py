@@ -140,17 +140,46 @@ def cache_shardings(cache: PyTree, mesh) -> PyTree:
 
 # ------------------------------------------------- strategy-step compositions
 
+def crosspod_residual_shardings(residuals: PyTree, mesh) -> PyTree:
+    """Placement for a stacked per-pod EF residual tree
+    (``dist.compress.init_residuals(tree, pods)``): each leaf is
+    ``(pods,) + grad_shape``.  The pods dim is scan-iterated by the
+    cross-pod reduce — never sharded — and the trailing dims take the same
+    structural rule the underlying gradient leaf would, so the in-scan
+    compress sees residual slices laid out like the gradients they
+    correct."""
+    size = _sizes(mesh).get(_MODEL_AXIS, 1)
+
+    def one(leaf):
+        inner = leaf.shape[1:]
+        if size > 1 and len(inner) >= 1:
+            skip = 0 if len(inner) >= 3 else None
+            dim = _model_dim(inner, size, skip=skip)
+            if dim is not None:
+                return _named(mesh, leaf.ndim, {dim + 1: _MODEL_AXIS})
+        return NamedSharding(mesh, P())
+
+    return jax.tree.map(one, residuals)
+
+
 def bundle_shardings(bundle: PyTree, mesh) -> PyTree:
     """Placement for a grouped strategy's optimizer-state bundle
-    (``{"opt": ..., "master"?: ...}``).  Moments and fp32 masters are
-    param-shaped, so the structural param rule applies leaf-wise; scalar
-    leaves (counts) fall through to replicated.
+    (``{"opt": ..., "master"?: ..., "ef"?: ...}``).  Moments and fp32
+    masters are param-shaped, so the structural param rule applies
+    leaf-wise; scalar leaves (counts) fall through to replicated; a
+    cross-pod EF residual tree under ``"ef"`` takes the pods-leading rule
+    (:func:`crosspod_residual_shardings`).
 
     This is also the placement the bundle PIPELINE (``repro.core.pipeline``)
     prefetches the next group's bundle under: identical to the spec
     ``group_step_shardings`` compiles the step's bundle argument with, so a
     prefetched copy is already exactly where the step will donate it and the
     in-step ``device_put`` is a no-op (the donation-safe handshake)."""
+    if isinstance(bundle, dict) and "ef" in bundle:
+        out = param_shardings({k: v for k, v in bundle.items() if k != "ef"},
+                              mesh)
+        out["ef"] = crosspod_residual_shardings(bundle["ef"], mesh)
+        return out
     return param_shardings(bundle, mesh)
 
 
@@ -192,6 +221,23 @@ def fpft_step_shardings(mesh, params: PyTree, opt_state: PyTree, batch: PyTree,
         else param_shardings(params, mesh)
     o = opt_state_shardings(opt_state, params, mesh)
     return (p, o, batch_shardings(batch, mesh), scalar), (p, o, scalar)
+
+
+def fpft_crosspod_step_shardings(mesh, params: PyTree, opt_state: PyTree,
+                                 residuals: PyTree, batch: PyTree,
+                                 param_shardings_tree: PyTree = None):
+    """``(in_shardings, out_shardings)`` for the cross-pod full-parameter
+    step ``step(params, opt_state, residuals, batch, lr) -> (params,
+    opt_state, residuals, loss)``.  As :func:`fpft_step_shardings`, plus the
+    stacked EF residual tree under the pods-leading rule — identical in/out
+    specs, so all three donated state args update copy-free."""
+    scalar = NamedSharding(mesh, P())
+    p = param_shardings_tree if param_shardings_tree is not None \
+        else param_shardings(params, mesh)
+    o = opt_state_shardings(opt_state, params, mesh)
+    r = crosspod_residual_shardings(residuals, mesh)
+    return ((p, o, r, batch_shardings(batch, mesh), scalar),
+            (p, o, r, scalar))
 
 
 def mezo_step_shardings(mesh, params: PyTree, batch: PyTree,

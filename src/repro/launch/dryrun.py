@@ -152,7 +152,8 @@ def _abstract_params(cfg: ArchConfig, dtype=jnp.bfloat16):
 
 
 def lower_train_cell(cfg: ArchConfig, shape: ShapeConfig, mesh,
-                     strategy: str = "hift", fused_update: bool = False):
+                     strategy: str = "hift", fused_update: bool = False,
+                     crosspod_pods: int = 0):
     """Build + lower + compile the train step of ``strategy`` for a cell.
 
     Lowering needs abstract shapes and explicit shardings, so the cell step
@@ -215,6 +216,36 @@ def lower_train_cell(cfg: ArchConfig, shape: ShapeConfig, mesh,
             lowered = fn.lower(params_s, state_s, batch_s, lr_s)
         return lowered, {"mode": "adalomo",
                          "factored_state_bytes": int(state_bytes)}
+
+    if fpft and crosspod_pods >= 2:
+        # the cross-pod compressed-reduce step: int8 EF wire between emulated
+        # pods, the stacked per-pod fp32 residual tree threading in/out as
+        # donated state — prices the residuals and proves the pods-leading
+        # sharding rule partitions at cell scale
+        from repro.core.strategy import CrossPodConfig, fpft_crosspod_step_body
+        from repro.dist.compress import init_residuals
+        from repro.dist.shardings import fpft_crosspod_step_shardings
+        from repro.optim.mixed_precision import BF16
+        b = jax.tree.leaves(batch_s)[0].shape[0]
+        if b % crosspod_pods:
+            raise ValueError(f"cell batch {b} not divisible by "
+                             f"--crosspod-pods {crosspod_pods}")
+        cp = CrossPodConfig(pods=crosspod_pods, compress=True)
+        step = fpft_crosspod_step_body(cfg, opt, policy=BF16, cross_pod=cp)
+        state_s = jax.eval_shape(opt.init, params_s)
+        res_s = jax.eval_shape(partial(init_residuals, pods=cp.pods),
+                               params_s)
+        ins, outs = fpft_crosspod_step_shardings(
+            mesh, params_s, state_s, res_s, batch_s,
+            param_shardings_tree=pshard)
+        ef_bytes = sum(
+            math.prod(x.shape or (1,)) * jnp.dtype(x.dtype).itemsize
+            for x in jax.tree.leaves(res_s))
+        fn = jax.jit(step, in_shardings=ins, out_shardings=outs)
+        with mesh, activation_sharding(mesh, _daxes(mesh)):
+            lowered = fn.lower(params_s, state_s, res_s, batch_s, lr_s)
+        return lowered, {"mode": "fpft_crosspod", "pods": cp.pods,
+                         "ef_residual_bytes": int(ef_bytes)}
 
     if fpft:
         def step(params, opt_state, batch, lr):
@@ -366,7 +397,7 @@ def lower_serve_cell(cfg: ArchConfig, shape: ShapeConfig, mesh,
 def run_cell(arch_id: str, shape_name: str, multi_pod: bool = False,
              strategy: str = "hift", save: bool = True,
              fused_update: bool = False, pipeline_depth: int = 1,
-             paged: bool = False) -> dict:
+             paged: bool = False, crosspod_pods: int = 0) -> dict:
     cfg = get_config(arch_id)
     shape = SHAPES[shape_name]
     ok, why = cell_supported(cfg, shape)
@@ -384,7 +415,8 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool = False,
         if shape.kind == "train":
             lowered, meta = lower_train_cell(cfg, shape, mesh,
                                              strategy=strategy,
-                                             fused_update=fused_update)
+                                             fused_update=fused_update,
+                                             crosspod_pods=crosspod_pods)
             meta["fused_update"] = fused_update
             meta["pipeline_depth"] = pipeline_depth
         else:
@@ -501,6 +533,10 @@ def main():
     ap.add_argument("--paged", action="store_true",
                     help="lower decode cells through the paged KV cache "
                          "(block tables; dense families)")
+    ap.add_argument("--crosspod-pods", type=int, default=0,
+                    help=">=2 lowers the fpft cell with the int8 EF "
+                         "cross-pod reduce and prices the stacked fp32 "
+                         "residual tree (ef_residual_bytes in the cell)")
     ap.add_argument("--fpft", action="store_true",
                     help="deprecated alias for --strategy fpft")
     args = ap.parse_args()
@@ -521,7 +557,8 @@ def main():
 
     results = [run_cell(a, s, multi_pod=mp, strategy=strategy,
                         fused_update=args.fused_update,
-                        pipeline_depth=args.pipeline_depth, paged=args.paged)
+                        pipeline_depth=args.pipeline_depth, paged=args.paged,
+                        crosspod_pods=args.crosspod_pods)
                for a, s, mp in cells]
     n_ok = sum(r["status"] == "ok" for r in results)
     n_skip = sum(r["status"] == "skipped" for r in results)

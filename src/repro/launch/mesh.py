@@ -21,6 +21,42 @@ import jax
 import numpy as np
 
 
+def init_distributed(coordinator: str, num_processes: int, process_id: int,
+                     *, local_device_count: int | None = None) -> None:
+    """Join a ``jax.distributed`` coordination service — the multi-process
+    launch path (``launch.train --coordinator host:port --num-processes N
+    --process-id i``).  Every process runs the SAME program; after this call
+    ``jax.devices()`` is the GLOBAL device list, so ``mesh_from_spec``
+    builds one mesh spanning all processes and the strategies' sharded
+    steps run multi-controller SPMD unchanged.
+
+    Must run before anything touches the jax backend:
+
+    - ``local_device_count`` fabricates that many host CPU devices per
+      process via ``XLA_FLAGS`` (the multi-host CI harness runs 2 processes
+      x 2 local devices = one 4-device global mesh on a laptop).
+    - On CPU backends the default cross-process collectives implementation
+      refuses multi-process computations outright; this selects the gloo
+      transport (the same one ``jax[cpu]`` ships for exactly this purpose).
+      Harmless on TPU/GPU, where collectives ride ICI/NCCL.
+    """
+    import os
+
+    if local_device_count:
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                flags + " --xla_force_host_platform_device_count="
+                f"{int(local_device_count)}").strip()
+    try:
+        jax.config.update("jax_cpu_collectives_implementation", "gloo")
+    except Exception:  # pragma: no cover - very old jaxlib: env-var fallback
+        os.environ.setdefault("JAX_CPU_COLLECTIVES_IMPLEMENTATION", "gloo")
+    jax.distributed.initialize(coordinator_address=coordinator,
+                               num_processes=num_processes,
+                               process_id=process_id)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")

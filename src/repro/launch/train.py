@@ -70,7 +70,26 @@ def main(argv=None):
                          "hift_pipelined defaults to 2")
     ap.add_argument("--mesh", default=None,
                     help="device mesh for sharded steps: DxM (data x model, "
-                         "e.g. 2x4) or name=size pairs (data=2,model=4)")
+                         "e.g. 2x4) or name=size pairs (data=2,model=4); "
+                         "under --coordinator the mesh spans the GLOBAL "
+                         "device list of all coordinated processes")
+    ap.add_argument("--coordinator", default=None,
+                    help="host:port of process 0 — joins a jax.distributed "
+                         "multi-process job (every process runs this same "
+                         "command with its own --process-id)")
+    ap.add_argument("--num-processes", type=int, default=None,
+                    help="total process count of the multi-process job")
+    ap.add_argument("--process-id", type=int, default=None,
+                    help="this process's rank in [0, num_processes)")
+    ap.add_argument("--local-devices", type=int, default=None,
+                    help="fabricate N host CPU devices per process "
+                         "(multi-host testing without accelerators)")
+    ap.add_argument("--crosspod-pods", type=int, default=0,
+                    help=">=2 splits each batch into that many pod chunks "
+                         "and reduces per-pod gradients (fpft/hift/lisa)")
+    ap.add_argument("--crosspod-exact", action="store_true",
+                    help="cross-pod reduce WITHOUT int8 EF compression "
+                         "(default compresses the wire)")
     ap.add_argument("--optimizer", default="adamw")
     ap.add_argument("--policy", default="fp32",
                     choices=["fp32", "mixed", "mixed_hi", "bf16"])
@@ -81,6 +100,17 @@ def main(argv=None):
     ap.add_argument("--resume", default="none", choices=["none", "auto"])
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+
+    if args.coordinator:
+        if args.num_processes is None or args.process_id is None:
+            ap.error("--coordinator requires --num-processes and "
+                     "--process-id")
+        from repro.launch.mesh import init_distributed
+        init_distributed(args.coordinator, args.num_processes,
+                         args.process_id,
+                         local_device_count=args.local_devices)
+        print(f"distributed: process {jax.process_index()}/"
+              f"{jax.process_count()}, {len(jax.devices())} global devices")
 
     cfg = get_config(args.arch, smoke=args.smoke)
     fam = get_family(cfg)
@@ -102,6 +132,10 @@ def main(argv=None):
     kw = {"schedule": sched, "policy": get_policy(args.policy), "mesh": mesh,
           "fused_update": args.fused_update,
           "pipeline_depth": args.pipeline_depth}
+    if args.crosspod_pods and args.crosspod_pods >= 2:
+        from repro.core import CrossPodConfig
+        kw["cross_pod"] = CrossPodConfig(pods=args.crosspod_pods,
+                                         compress=not args.crosspod_exact)
     if strategy in ("hift", "hift_pipelined"):
         kw["hift"] = HiFTConfig(m=args.m, strategy=args.order, seed=args.seed)
     elif strategy == "lisa":

@@ -144,10 +144,24 @@ def save_state(ckpt_dir: str | Path, step: int, state,
                 async_write=async_write)
 
 
-def restore_state(ckpt_dir: str | Path, step: int):
-    """Inverse of :func:`save_state` — returns a ``TrainState``."""
+def restore_state(ckpt_dir: str | Path, step: int, *, mesh=None,
+                  strategy=None):
+    """Inverse of :func:`save_state` — returns a ``TrainState``.
+
+    ``mesh=`` / ``strategy=`` take the elastic-resize path
+    (``repro.dist.elastic``): the restored host-resident state is committed
+    onto a DIFFERENT mesh shape than it trained on — sharded optimizer
+    moments, AdaLomo factored stats, the HiFT queue position and EF
+    residuals all land on the new layout, so jobs survive pod resizes.
+    Prefer ``strategy=`` (an instance built for the target mesh): it
+    restores the full resident placement; a bare ``mesh=`` places params
+    only and leaves the rest for the first step's ``device_put``."""
     from repro.core.strategy import TrainState
-    return TrainState.from_tree(restore(ckpt_dir, step))
+    state = TrainState.from_tree(restore(ckpt_dir, step))
+    if mesh is not None or strategy is not None:
+        from repro.dist.elastic import resize_state
+        state = resize_state(state, strategy=strategy, mesh=mesh)
+    return state
 
 
 def restore_latest(ckpt_dir: str | Path, like: PyTree = None):

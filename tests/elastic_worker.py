@@ -1,0 +1,96 @@
+"""Subprocess worker for tests/test_elastic.py — elastic TrainState resize.
+
+Runs under a FORCED 4-device CPU backend (flag must be set before jax
+initializes, hence a separate process).  Each scenario trains 3 steps on a
+(data=2, model=2) mesh, checkpoints, keeps training for reference losses,
+then restores the SAME checkpoint onto (1x4) and (4x1) meshes via
+``restore_state(..., strategy=)`` and verifies the resumed run reproduces
+the reference losses — sharded optimizer moments, AdaLomo factored stats,
+the HiFT queue position and cross-pod EF residuals all survive the mesh
+change bit-for-bit.
+
+Not named test_* on purpose — pytest must not collect it.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=4").strip()
+
+import json
+import tempfile
+
+import jax
+import numpy as np
+
+from sharded_worker import make_batch, max_leaf_diff, tiny_cfg
+
+_TARGETS = ("1x4", "4x1")
+
+
+def _run(runner, cfg, first_step, n):
+    """n steps with per-step batches (seed = global step index)."""
+    losses = []
+    for s in range(first_step, first_step + n):
+        losses.append(float(runner.train_step(make_batch(cfg, seed=s))))
+    return losses
+
+
+def scenario(cfg, params, strategy, **kw):
+    from repro.core import make_runner
+    from repro.launch.mesh import mesh_from_spec
+    from repro.train.checkpoint import restore_state, save_state
+
+    out = {}
+    runner = make_runner(cfg, strategy, params=params,
+                         mesh=mesh_from_spec("2x2"), **kw)
+    _run(runner, cfg, 0, 3)
+    saved = runner.state
+    with tempfile.TemporaryDirectory() as d:
+        save_state(d, 3, saved)
+        out["ref"] = _run(runner, cfg, 3, 3)  # uninterrupted continuation
+        for spec in _TARGETS:
+            fresh = make_runner(cfg, strategy, params=params,
+                                mesh=mesh_from_spec(spec), **kw)
+            restored = restore_state(d, 3, strategy=fresh.strategy)
+            # resize is a relayout, not a recompute: every leaf bit-equal
+            out[f"{spec}/dopt"] = max_leaf_diff(restored.opt_state,
+                                                saved.opt_state)
+            extra_ok = 1
+            for key in ("order", "cursor", "cycle", "ef_residual"):
+                if saved.extra and key in saved.extra:
+                    a = jax.tree.leaves(saved.extra[key])
+                    b = jax.tree.leaves(restored.extra[key])
+                    extra_ok &= int(len(a) == len(b) and all(
+                        np.array_equal(np.asarray(x), np.asarray(y))
+                        for x, y in zip(a, b)))
+            out[f"{spec}/extra_ok"] = extra_ok
+            fresh.state = restored
+            out[spec] = _run(fresh, cfg, 3, 3)
+    return out
+
+
+def main():
+    assert len(jax.devices()) >= 4, jax.devices()
+    from repro.core import CrossPodConfig, HiFTConfig, LRSchedule
+    from repro.models import transformer as T
+
+    cfg = tiny_cfg()
+    params = T.init(cfg, jax.random.PRNGKey(0))
+
+    out = {}
+    out["hift_adamw"] = scenario(
+        cfg, params, "hift", optimizer="adamw",
+        hift=HiFTConfig(m=1, strategy="random", seed=3),
+        schedule=LRSchedule(1e-3))
+    out["fpft_adamw"] = scenario(
+        cfg, params, "fpft", optimizer="adamw", schedule=LRSchedule(1e-3))
+    out["adalomo"] = scenario(
+        cfg, params, "adalomo", schedule=LRSchedule(1e-3))
+    out["fpft_crosspod"] = scenario(
+        cfg, params, "fpft", optimizer="sgd", schedule=LRSchedule(1e-2),
+        cross_pod=CrossPodConfig(pods=2, compress=True))
+    print(json.dumps(out))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,110 @@
+"""Property tests for the int8 error-feedback codec (hypothesis).
+
+The wire compressor's contract is *aggregate losslessness*: over any
+gradient stream, the sum of what crossed the wire differs from the sum of
+the true gradients by exactly the final residual, and that residual is
+bounded by half a quantization step — the error never accumulates.  These
+properties must hold for adversarial inputs (zeros, huge dynamic range,
+denormals, bf16), which is what hypothesis is for; the deterministic
+smoke coverage lives in tests/test_crosspod.py.
+
+hypothesis is a CI-only dependency (see .github/workflows/ci.yml) —
+skipped cleanly where it isn't installed.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.dist.compress import (compress_decompress,  # noqa: E402
+                                 compress_with_feedback, dequantize_int8,
+                                 init_residuals, quantize_int8)
+
+_SETTINGS = settings(max_examples=50, deadline=None)
+
+finite = st.floats(min_value=-1e4, max_value=1e4, allow_nan=False,
+                   allow_infinity=False, width=32)
+grad_arrays = st.lists(finite, min_size=1, max_size=64).map(
+    lambda xs: jnp.asarray(xs, jnp.float32))
+
+
+@_SETTINGS
+@given(grad_arrays)
+def test_quantize_roundtrip_error_bounded_by_half_step(g):
+    q, scale = quantize_int8(g)
+    err = np.abs(np.asarray(dequantize_int8(q, scale)) - np.asarray(g))
+    # one quantization step is `scale`; rounding error <= scale/2 (plus fp
+    # slack — scale spans up to 1e4/127 here)
+    assert np.all(err <= float(scale) / 2 + 1e-5 * float(scale) + 1e-30)
+
+
+@_SETTINGS
+@given(st.lists(grad_arrays.filter(lambda g: g.shape[0] >= 1),
+                min_size=1, max_size=10).filter(
+                    lambda gs: len({g.shape for g in gs}) == 1))
+def test_error_feedback_stream_is_lossless_in_aggregate(gs):
+    """sum(dequantized) + final_residual == sum(true) for ANY stream, and
+    |final_residual| <= scale/2 elementwise: the EF loop re-injects every
+    bit the quantizer dropped."""
+    r = jnp.zeros_like(gs[0])
+    true_sum = np.zeros(gs[0].shape, np.float64)
+    wire_sum = np.zeros(gs[0].shape, np.float64)
+    last_scale = 0.0
+    for g in gs:
+        q, scale, r = compress_with_feedback(g, r)
+        true_sum += np.asarray(g, np.float64)
+        wire_sum += np.asarray(dequantize_int8(q, scale), np.float64)
+        last_scale = float(scale)
+    mag = max(1.0, float(np.max(np.abs(true_sum))))
+    np.testing.assert_allclose(wire_sum + np.asarray(r, np.float64),
+                               true_sum, atol=2e-4 * mag)
+    assert np.all(np.abs(np.asarray(r)) <= last_scale / 2
+                  + 1e-5 * last_scale + 1e-30)
+
+
+@_SETTINGS
+@given(grad_arrays)
+def test_compress_decompress_matches_manual_pipeline(g):
+    r0 = jnp.zeros_like(g)
+    ghat, r1 = compress_decompress(g, r0)
+    q, scale, r1b = compress_with_feedback(g, r0)
+    np.testing.assert_array_equal(np.asarray(ghat),
+                                  np.asarray(dequantize_int8(q, scale)))
+    np.testing.assert_array_equal(np.asarray(r1), np.asarray(r1b))
+
+
+@_SETTINGS
+@given(st.sampled_from([jnp.float32, jnp.bfloat16]), grad_arrays)
+def test_dtype_contract(dtype, g):
+    g = g.astype(dtype)
+    ghat, r = compress_decompress(g, jnp.zeros(g.shape, jnp.float32))
+    assert ghat.dtype == dtype
+    assert r.dtype == jnp.float32
+
+
+# arbitrary nested tree structures for init_residuals
+leaf_shapes = st.lists(st.integers(min_value=1, max_value=4), min_size=0,
+                       max_size=3).map(tuple)
+leaves = st.builds(jnp.zeros, leaf_shapes,
+                   st.sampled_from([jnp.float32, jnp.bfloat16, jnp.int8]))
+trees = st.recursive(
+    leaves,
+    lambda kids: st.dictionaries(st.sampled_from("abcd"), kids, min_size=1,
+                                 max_size=3) | st.lists(kids, min_size=1,
+                                                        max_size=3),
+    max_leaves=8)
+
+
+@_SETTINGS
+@given(trees, st.one_of(st.none(), st.integers(min_value=1, max_value=4)))
+def test_init_residuals_matches_arbitrary_trees(tree, pods):
+    res = init_residuals(tree, pods)
+    assert jax.tree.structure(res) == jax.tree.structure(tree)
+    for x, r in zip(jax.tree.leaves(tree), jax.tree.leaves(res)):
+        want = x.shape if pods is None else (pods,) + tuple(x.shape)
+        assert r.shape == want
+        assert r.dtype == jnp.float32
+        assert float(jnp.sum(jnp.abs(r))) == 0.0

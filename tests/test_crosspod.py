@@ -1,0 +1,227 @@
+"""Cross-pod data parallelism: int8 error-feedback wire reduce.
+
+Single-device, in-process tests for the ``CrossPodConfig`` path: dtype
+round-trips of the compression codec, exact-reduce equivalence with the
+plain step, convergence of the compressed reduce, wire-byte accounting,
+the memory model's residual pricing, and checkpointability of the EF
+residual tree (FPFT extra leaf + HiFT bundle leaf).  The multi-process and
+multi-device compositions live in tests/test_multihost.py and
+tests/test_elastic.py.
+"""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_batch, tiny_dense_cfg
+from repro.core import (CrossPodConfig, HiFTConfig, LRSchedule, make_runner,
+                        memory_model)
+from repro.core.registry import get_strategy_cls
+from repro.dist.compress import (compress_decompress, compress_with_feedback,
+                                 dequantize_int8, init_residuals,
+                                 quantize_int8, wire_bytes)
+from repro.models import transformer as T
+
+
+# ---------------------------------------------------------------- codec
+
+def test_dequantize_dtype_roundtrip():
+    g = jnp.linspace(-1.0, 1.0, 64, dtype=jnp.float32)
+    q, scale = quantize_int8(g)
+    assert dequantize_int8(q, scale).dtype == jnp.float32
+    assert dequantize_int8(q, scale, jnp.bfloat16).dtype == jnp.bfloat16
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_compress_with_feedback_dtypes(dtype):
+    """Dequantized gradient comes back in the input dtype; the residual is
+    ALWAYS fp32 — a bf16 residual would swallow the sub-quantum error the
+    feedback loop exists to carry."""
+    g = jnp.linspace(-0.3, 0.7, 128).astype(dtype)
+    r = jnp.zeros(128, jnp.float32)
+    ghat, new_r = compress_decompress(g, r)
+    assert ghat.dtype == dtype
+    assert new_r.dtype == jnp.float32
+    q, scale, new_r2 = compress_with_feedback(g, r)
+    assert q.dtype == jnp.int8 and new_r2.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(new_r), np.asarray(new_r2),
+                               atol=1e-6)
+
+
+def test_error_feedback_is_lossless_in_aggregate():
+    """Sum of dequantized stream == sum of true stream minus final residual:
+    EF makes quantization error transient, not accumulating."""
+    key = jax.random.PRNGKey(7)
+    r = jnp.zeros(256, jnp.float32)
+    true_sum = np.zeros(256, np.float64)
+    deq_sum = np.zeros(256, np.float64)
+    for s in range(20):
+        g = jax.random.normal(jax.random.fold_in(key, s), (256,)) * 0.1
+        q, scale, r = compress_with_feedback(g, r)
+        true_sum += np.asarray(g, np.float64)
+        deq_sum += np.asarray(dequantize_int8(q, scale), np.float64)
+    np.testing.assert_allclose(deq_sum + np.asarray(r, np.float64), true_sum,
+                               atol=1e-4)
+
+
+def test_init_residuals_pods_axis():
+    tree = {"a": jnp.ones((3, 5), jnp.bfloat16), "b": jnp.ones((7,))}
+    flat = init_residuals(tree)
+    assert flat["a"].shape == (3, 5) and flat["a"].dtype == jnp.float32
+    stacked = init_residuals(tree, pods=2)
+    assert stacked["a"].shape == (2, 3, 5)
+    assert stacked["b"].shape == (2, 7)
+    assert all(float(jnp.sum(jnp.abs(x))) == 0.0
+               for x in jax.tree.leaves(stacked))
+
+
+def test_wire_bytes_ratio():
+    tree = {"w": jnp.zeros((64, 64)), "b": jnp.zeros((64,))}
+    exact = wire_bytes(tree, compressed=False)
+    comp = wire_bytes(tree, compressed=True)
+    n = 64 * 64 + 64
+    assert exact == 4 * n
+    assert comp == n + 4 * 2          # int8 payload + one fp32 scale/leaf
+    assert exact / comp > 3.9
+
+
+# ------------------------------------------------------------ strategies
+
+def _losses(runner, cfg, n, batch=8):
+    return [float(runner.train_step(make_batch(cfg, batch=batch, seq=32,
+                                               seed=s)))
+            for s in range(n)]
+
+
+def test_exact_crosspod_reduce_matches_plain_fpft():
+    """compress=False: chunked per-pod mean == one full-batch gradient."""
+    cfg = tiny_dense_cfg(ce_chunk=0)
+    params = T.init(cfg, jax.random.PRNGKey(0))
+    kw = dict(optimizer="sgd", schedule=LRSchedule(1e-2))
+    plain = make_runner(cfg, "fpft", params=params, **kw)
+    pods = make_runner(cfg, "fpft", params=params,
+                       cross_pod=CrossPodConfig(pods=2, compress=False), **kw)
+    lp = _losses(plain, cfg, 3)
+    lc = _losses(pods, cfg, 3)
+    assert max(abs(a - b) for a, b in zip(lp, lc)) < 1e-4
+
+
+def test_compressed_reduce_converges_close_to_exact():
+    """ISSUE acceptance: int8 EF wire within 2% final loss of the exact
+    reduce on the convergence smoke."""
+    cfg = tiny_dense_cfg(vocab=128, ce_chunk=0)
+    params = T.init(cfg, jax.random.PRNGKey(0))
+    kw = dict(optimizer="sgd", schedule=LRSchedule(5e-3))
+    final = {}
+    for name, compress in (("exact", False), ("int8", True)):
+        r = make_runner(cfg, "fpft", params=params,
+                        cross_pod=CrossPodConfig(pods=2, compress=compress),
+                        **kw)
+        losses = [float(r.train_step(make_batch(cfg, batch=8, seq=32,
+                                                seed=s % 3)))
+                  for s in range(30)]
+        assert np.isfinite(losses).all()
+        final[name] = float(np.mean(losses[-5:]))
+    assert final["exact"] > 0
+    assert abs(final["int8"] - final["exact"]) / final["exact"] < 0.02, final
+
+
+def test_batch_must_divide_into_pods():
+    cfg = tiny_dense_cfg(ce_chunk=0)
+    params = T.init(cfg, jax.random.PRNGKey(0))
+    r = make_runner(cfg, "fpft", params=params, optimizer="sgd",
+                    schedule=LRSchedule(1e-2),
+                    cross_pod=CrossPodConfig(pods=3))
+    with pytest.raises(ValueError, match="pods"):
+        r.train_step(make_batch(cfg, batch=4, seq=32))
+
+
+def test_unsupported_strategy_rejects_cross_pod():
+    cfg = tiny_dense_cfg(ce_chunk=0)
+    params = T.init(cfg, jax.random.PRNGKey(0))
+    assert not get_strategy_cls("mezo").supports_cross_pod
+    with pytest.raises((ValueError, TypeError)):
+        make_runner(cfg, "mezo", params=params, schedule=LRSchedule(1e-3),
+                    cross_pod=CrossPodConfig(pods=2))
+
+
+def test_hift_residuals_ride_bundles_and_checkpoint():
+    from repro.train.checkpoint import restore_state, save_state
+
+    cfg = tiny_dense_cfg(ce_chunk=0)
+    params = T.init(cfg, jax.random.PRNGKey(0))
+    r = make_runner(cfg, "hift", params=params, optimizer="sgd",
+                    hift=HiFTConfig(m=1), schedule=LRSchedule(1e-2),
+                    cross_pod=CrossPodConfig(pods=2, compress=True))
+    _losses(r, cfg, 2)
+    bundles = r.state.opt_state
+    touched = [b for b in bundles.values() if "ef" in b]
+    assert touched, "no bundle carries an EF residual"
+    for b in touched:
+        for leaf in jax.tree.leaves(b["ef"]):
+            assert leaf.shape[0] == 2 and leaf.dtype == jnp.float32
+    with tempfile.TemporaryDirectory() as d:
+        save_state(d, r.step_count, r.state)
+        restored = restore_state(d, r.step_count)
+    a = jax.tree.leaves({k: b["ef"] for k, b in bundles.items() if "ef" in b})
+    b = jax.tree.leaves({k: v["ef"] for k, v in restored.opt_state.items()
+                         if "ef" in v})
+    assert len(a) == len(b) > 0
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_fpft_residual_checkpoint_roundtrip():
+    from repro.train.checkpoint import restore_state, save_state
+
+    cfg = tiny_dense_cfg(ce_chunk=0)
+    params = T.init(cfg, jax.random.PRNGKey(0))
+    r = make_runner(cfg, "fpft", params=params, optimizer="sgd",
+                    schedule=LRSchedule(1e-2),
+                    cross_pod=CrossPodConfig(pods=2, compress=True))
+    _losses(r, cfg, 2)
+    res = r.state.extra["ef_residual"]
+    assert any(float(jnp.max(jnp.abs(x))) > 0 for x in jax.tree.leaves(res))
+    with tempfile.TemporaryDirectory() as d:
+        save_state(d, r.step_count, r.state)
+        restored = restore_state(d, r.step_count)
+    for x, y in zip(jax.tree.leaves(res),
+                    jax.tree.leaves(restored.extra["ef_residual"])):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------- memory model
+
+def _shapes_units(cfg):
+    from repro.models import get_family
+    fam = get_family(cfg)
+    shapes = jax.eval_shape(lambda: fam.init(cfg, jax.random.PRNGKey(0)))
+    return shapes, fam.unit_spec(cfg)
+
+
+def test_memory_model_prices_fpft_residuals():
+    cfg = tiny_dense_cfg()
+    shapes, units = _shapes_units(cfg)
+    base = memory_model.analyze(shapes, units, mode="fpft")
+    ef = memory_model.analyze(shapes, units, mode="fpft", ef_pods=2)
+    assert ef.ef_mb * 2**20 == pytest.approx(4 * 2 * base.n_params)
+    assert ef.pgs_gb > base.pgs_gb
+
+
+def test_memory_model_prices_hift_residuals_per_group():
+    cfg = tiny_dense_cfg()
+    shapes, units = _shapes_units(cfg)
+    ef = memory_model.analyze(shapes, units, mode="hift", m=1, ef_pods=2)
+    assert ef.ef_mb * 2**20 == pytest.approx(4 * 2 * ef.peak_trainable)
+    piped = memory_model.analyze(shapes, units, mode="hift_pipelined", m=1,
+                                 ef_pods=2)
+    assert piped.ef_mb == pytest.approx(2 * ef.ef_mb)
+
+
+def test_memory_model_rejects_gradient_free_modes():
+    cfg = tiny_dense_cfg()
+    shapes, units = _shapes_units(cfg)
+    with pytest.raises(ValueError, match="ef_pods"):
+        memory_model.analyze(shapes, units, mode="lomo", ef_pods=2)

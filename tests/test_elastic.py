@@ -1,0 +1,56 @@
+"""Elastic resize: a checkpoint written on one mesh resumes on another.
+
+Each scenario (tests/elastic_worker.py, forced 4-device CPU subprocess)
+trains 3 steps on a 2x2 mesh, checkpoints, continues for reference losses,
+then restores the checkpoint onto 1x4 and 4x1 meshes through
+``restore_state(..., strategy=)`` and resumes.  The resumed losses must
+match the uninterrupted run — the resize is a pure relayout, so optimizer
+moments / factored stats / HiFT queue / EF residuals are also asserted
+bit-equal to the saved state.
+"""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+_REPO = Path(__file__).resolve().parent.parent
+_TARGETS = ("1x4", "4x1")
+
+
+@pytest.fixture(scope="module")
+def out():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(_REPO / "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)  # the worker forces its own device count
+    r = subprocess.run(
+        [sys.executable, str(_REPO / "tests" / "elastic_worker.py")],
+        capture_output=True, text=True, timeout=900, env=env)
+    assert r.returncode == 0, f"worker failed:\n{r.stderr[-4000:]}"
+    return json.loads(r.stdout.strip().splitlines()[-1])
+
+
+@pytest.mark.parametrize("scenario,tol", [
+    ("hift_adamw", 1e-3),     # sqrt(v) amplifies reduction-order noise
+    ("fpft_adamw", 1e-3),
+    ("adalomo", 1e-3),
+    ("fpft_crosspod", 1e-4),  # linear sgd update + identical EF arithmetic
+])
+@pytest.mark.parametrize("spec", _TARGETS)
+def test_resumed_losses_match_uninterrupted(out, scenario, spec, tol):
+    ref, got = out[scenario]["ref"], out[scenario][spec]
+    assert len(ref) == len(got) == 3
+    dloss = max(abs(a - b) for a, b in zip(ref, got))
+    assert dloss < tol, (scenario, spec, ref, got)
+
+
+@pytest.mark.parametrize("scenario",
+                         ["hift_adamw", "fpft_adamw", "adalomo",
+                          "fpft_crosspod"])
+@pytest.mark.parametrize("spec", _TARGETS)
+def test_resize_is_bit_exact_relayout(out, scenario, spec):
+    assert out[scenario][f"{spec}/dopt"] == 0.0
+    assert out[scenario][f"{spec}/extra_ok"] == 1

@@ -1,0 +1,130 @@
+"""Multi-process data parallelism: 2 coordinated CPU processes form ONE
+mesh (jax.distributed + fabricated local devices) and the strategies'
+sharded steps must match the single-process path.
+
+The coordinated job runs in subprocesses (tests/multihost_worker.py): the
+XLA device-count flag and the gloo CPU-collectives transport must be set
+before jax initializes its backend, and the two workers must be separate
+OS processes to exercise real cross-process collectives.  Both workers
+print the replicated losses; this parent asserts (a) the processes agree
+bit-for-bit — they executed one SPMD program — and (b) the losses match an
+in-process single-device reference within the same tolerances the
+single-process sharding tests use.
+
+Environments whose jax build cannot run multi-process CPU collectives make
+the worker print an ``unsupported`` marker, which SKIPS these tests
+instead of failing them.
+"""
+import json
+import os
+import socket
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import pytest
+
+from conftest import make_batch as _conftest_batch  # noqa: F401 (path check)
+from repro.core import CrossPodConfig, HiFTConfig, LRSchedule, make_runner
+from repro.models import transformer as T
+
+_REPO = Path(__file__).resolve().parent.parent
+_NPROC = 2
+_LOCAL_DEVICES = 2
+
+
+def _free_port() -> int:
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+
+
+@pytest.fixture(scope="module")
+def worker_outs():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(_REPO / "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)  # workers fabricate their own device count
+    port = _free_port()
+    procs = [
+        subprocess.Popen(
+            [sys.executable, str(_REPO / "tests" / "multihost_worker.py"),
+             str(port), str(_NPROC), str(i), str(_LOCAL_DEVICES)],
+            stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True,
+            env=env)
+        for i in range(_NPROC)
+    ]
+    outs = []
+    for p in procs:
+        try:
+            stdout, stderr = p.communicate(timeout=900)
+        except subprocess.TimeoutExpired:
+            for q in procs:
+                q.kill()
+            raise
+        assert p.returncode == 0, f"worker failed:\n{stderr[-4000:]}"
+        outs.append(json.loads(stdout.strip().splitlines()[-1]))
+    if any("unsupported" in o for o in outs):
+        pytest.skip(f"multi-process CPU collectives unavailable: "
+                    f"{[o.get('unsupported') for o in outs]}")
+    return outs
+
+
+@pytest.fixture(scope="module")
+def reference():
+    """Single-device, single-process losses on the workers' exact inputs."""
+    from sharded_worker import make_batch, run_steps, tiny_cfg
+
+    cfg = tiny_cfg()
+    params = T.init(cfg, jax.random.PRNGKey(0))
+    batch = make_batch(cfg)
+    ref = {}
+    ref["hift_sgd"] = run_steps(
+        make_runner(cfg, "hift", params=params, optimizer="sgd",
+                    hift=HiFTConfig(m=1), schedule=LRSchedule(1e-2)),
+        batch, 3)
+    ref["fpft_adamw"] = run_steps(
+        make_runner(cfg, "fpft", params=params, optimizer="adamw",
+                    schedule=LRSchedule(1e-3)),
+        batch, 3)
+    ref["adalomo"] = run_steps(
+        make_runner(cfg, "adalomo", params=params,
+                    schedule=LRSchedule(1e-3)),
+        batch, 3)
+    ref["fpft_crosspod"] = run_steps(
+        make_runner(cfg, "fpft", params=params, optimizer="sgd",
+                    schedule=LRSchedule(1e-2),
+                    cross_pod=CrossPodConfig(pods=2, compress=True)),
+        batch, 3)
+    return ref
+
+
+def test_two_processes_form_one_mesh(worker_outs):
+    for o in worker_outs:
+        assert o["process_count"] == _NPROC
+        assert o["global_devices"] == _NPROC * _LOCAL_DEVICES
+    assert sorted(o["process_index"] for o in worker_outs) == \
+        list(range(_NPROC))
+
+
+def test_processes_agree_bitwise(worker_outs):
+    # one SPMD program: every process computes the same replicated losses
+    a, b = worker_outs
+    for key in ("hift_sgd", "fpft_adamw", "adalomo", "fpft_crosspod"):
+        assert a[key] == b[key], key
+
+
+@pytest.mark.parametrize("key,tol", [
+    ("hift_sgd", 1e-4),      # linear update: reduction-order noise only
+    ("fpft_adamw", 1e-3),    # sqrt(v) amplifies fp noise
+    ("adalomo", 1e-3),
+    ("fpft_crosspod", 1e-4),  # same int8 EF arithmetic both sides
+])
+def test_multiprocess_matches_single_process(worker_outs, reference, key,
+                                             tol):
+    got = worker_outs[0][key]
+    want = reference[key]
+    assert len(got) == len(want) == 3
+    dloss = max(abs(g - w) for g, w in zip(got, want))
+    assert dloss < tol, (key, got, want)

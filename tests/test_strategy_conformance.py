@@ -100,6 +100,41 @@ def test_checkpoint_roundtrip_mid_run(strategy, tmp_path):
 
 
 @pytest.mark.parametrize("strategy", ALL_STRATEGIES)
+def test_compressed_reduce_lockstep(strategy, tmp_path):
+    """Cross-pod int8 EF reduce is part of the strategy contract: any entry
+    declaring ``supports_cross_pod`` must train with the compressed reduce,
+    checkpoint its error-feedback residuals, and resume bit-identically —
+    keyed on the declaration, zero per-strategy special-casing."""
+    from repro.core import CrossPodConfig
+
+    if not registry.get_strategy_cls(strategy).supports_cross_pod:
+        pytest.skip(f"{strategy} does not declare supports_cross_pod")
+    cfg = tiny_dense_cfg(ce_chunk=0)
+    cp = CrossPodConfig(pods=2, compress=True)
+    batch = make_batch(cfg, batch=2, seq=16)
+
+    r = make_runner(cfg, strategy, seed=0, schedule=LRSchedule(base_lr=3e-3),
+                    cross_pod=cp)
+    for _ in range(2):
+        r.train_step(batch)
+    ckpt.save_state(tmp_path, 2, r.state)
+    restored = ckpt.restore_state(tmp_path, 2)
+    _assert_same(_snapshot(r.state), _snapshot(restored),
+                 err=f"{strategy}: crosspod restore @ ")
+
+    r2 = make_runner(cfg, strategy, seed=7, schedule=LRSchedule(base_lr=3e-3),
+                     cross_pod=cp)
+    r2.load_state_dict(restored.to_tree())
+    for _ in range(2):
+        l1 = float(r.train_step(batch))
+        l2 = float(r2.train_step(batch))
+        np.testing.assert_allclose(l1, l2, atol=1e-6)
+    # lockstep must include the residuals: identical EF state either side
+    _assert_same(_snapshot(r.state), _snapshot(r2.state),
+                 err=f"{strategy}: crosspod lockstep @ ")
+
+
+@pytest.mark.parametrize("strategy", ALL_STRATEGIES)
 def test_metrics_contract(strategy):
     cfg = tiny_dense_cfg(ce_chunk=0)
     r = _runner(strategy, cfg)
