@@ -48,7 +48,14 @@ from repro.models import transformer as T
 DEFAULT_OUT = Path(__file__).resolve().parents[1] / "BENCH_speed.json"
 
 
-def _cfg():
+def _cfg(tier="default"):
+    if tier == "large":
+        # nightly tier: big enough that the ChunkStream actually cycles
+        # through many chunks per step and the backward dominates python
+        # overhead — still CPU-feasible in minutes
+        return ArchConfig(name="bench-large", family="dense", n_layers=12,
+                          d_model=512, n_heads=8, kv_heads=4, d_ff=2048,
+                          vocab=4096, block_q=64, block_k=64, ce_chunk=64)
     return ArchConfig(name="bench", family="dense", n_layers=8, d_model=256,
                       n_heads=8, kv_heads=4, d_ff=1024, vocab=2048,
                       block_q=64, block_k=64, ce_chunk=64)
@@ -113,11 +120,17 @@ def _bench_mesh():
     return mesh_from_spec(f"2x{n // 2}" if n >= 4 else "2x1")
 
 
-def run(csv=True, quick=False, out=None, reps=3):
+def run(csv=True, quick=False, out=None, reps=3, tier=None):
     """``out=None`` (the default for library callers like benchmarks/run.py)
     prints the table only; pass a path — the CLI passes ``DEFAULT_OUT`` — to
-    also emit the machine-readable JSON and run the headline duel."""
-    cfg = _cfg()
+    also emit the machine-readable JSON and run the headline duel.
+
+    ``tier``: ``quick`` (== ``quick=True``: adamw-only, no mesh/mezo rows),
+    ``default``, or ``large`` (the nightly/manual CI job: bigger model so the
+    streamed rows cycle real chunk counts)."""
+    tier = tier or ("quick" if quick else "default")
+    quick = quick or tier == "quick"
+    cfg = _cfg(tier)
     params = T.init(cfg, jax.random.PRNGKey(0))
     batch = _batch(cfg)
     sched = LRSchedule(1e-4)
@@ -145,12 +158,27 @@ def run(csv=True, quick=False, out=None, reps=3):
                   f"steps_per_s={1/t:.2f}")
         return t
 
+    stream_window = (4 << 20) if tier == "large" else 256 << 10
     opts = ["adamw"] if quick else ["adamw", "sgd"]
     for opt in opts:
         tf = bench("fpft", opt, warmup=2)
         th = bench("hift", opt, hift=HiFTConfig(m=1))
         if csv:
             print(f"speed_table/#hift-vs-fpft/{opt},speedup={tf/th:.2f}x")
+        # ChunkFT: the same full-param step with host-resident optimizer
+        # state streaming through a bounded chunk window.  On CPU the
+        # host<->device copies are no-ops, so this row prices the chunk-loop
+        # dispatch overhead the streaming adds over resident fpft; the
+        # memory side of the trade is benchmarks/memory_table.py's
+        # fpft_streamed rows
+        ts = bench("fpft_streamed", opt, warmup=2,
+                   stream_window=stream_window)
+        if csv:
+            print(f"speed_table/#streamed-vs-resident-fpft/{opt},"
+                  f"overhead={ts/tf:.2f}x")
+        if opt == "adamw" and not quick:
+            bench("fpft_streamed", opt, pipelined=True, pipeline_depth=3,
+                  warmup=2, stream_window=stream_window)
         # the two hot-loop knobs, separately and together
         tp = bench("hift", opt, pipelined=True, pipeline_depth=2,
                    hift=HiFTConfig(m=1))
@@ -212,6 +240,7 @@ def run(csv=True, quick=False, out=None, reps=3):
             "backend": jax.default_backend(),
             "devices": len(jax.devices()),
             "reps": reps,
+            "tier": tier,
             "rows": rows,
         }
         # headline claim, measured as an interleaved duel (see _duel): the
@@ -242,11 +271,19 @@ def run(csv=True, quick=False, out=None, reps=3):
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
-                    help="adamw-only, no mesh/mezo rows (CI smoke)")
-    ap.add_argument("--reps", type=int, default=3,
-                    help="timing repetitions; best-of is reported")
+                    help="alias for --tier quick")
+    ap.add_argument("--tier", default=None,
+                    choices=["quick", "default", "large"],
+                    help="quick: adamw-only, no mesh/mezo rows (CI smoke); "
+                         "large: bigger model + more reps (the nightly/"
+                         "manual bench-large CI job)")
+    ap.add_argument("--reps", type=int, default=None,
+                    help="timing repetitions; best-of is reported "
+                         "(default 3, 5 for --tier large)")
     ap.add_argument("--out", default=str(DEFAULT_OUT),
                     help="BENCH_speed.json path ('' disables)")
     args = ap.parse_args()
+    tier = args.tier or ("quick" if args.quick else "default")
+    reps = args.reps if args.reps is not None else (5 if tier == "large" else 3)
     print("name,us_per_call,derived")
-    run(quick=args.quick, out=args.out or None, reps=args.reps)
+    run(quick=args.quick, out=args.out or None, reps=reps, tier=tier)

@@ -1,16 +1,18 @@
 """HiFT core: the paper's contribution + the unified Strategy API."""
 from repro.core.grouping import Group, make_groups, order_groups, split_params, merge_params, group_cut
 from repro.core.scheduler import LRSchedule
-from repro.core.pipeline import BundlePipeline, PipelineStats
+from repro.core.pipeline import (BundlePipeline, ChunkLayout, ChunkStream,
+                                 PipelineStats)
 from repro.core.strategy import (TrainState, Strategy, Runner,
                                  HiFTConfig, LiSAConfig, MeZOConfig,
                                  LOMOConfig, AdaLomoConfig, CrossPodConfig,
-                                 HiFTStrategy,
+                                 StreamConfig, HiFTStrategy,
                                  FPFTStrategy, LiSAStrategy, MeZOStrategy,
                                  LOMOStrategy, AdaLomoStrategy,
-                                 PipelinedHiFTStrategy,
+                                 PipelinedHiFTStrategy, StreamedFPFTStrategy,
                                  build_fpft_step, fpft_step_body,
                                  fpft_crosspod_step_body, crosspod_reduce,
+                                 fpft_grad_body, fpft_crosspod_grad_body,
                                  lomo_step_body, adalomo_step_body,
                                  adalomo_init_opt_state, lomo_pieces_of,
                                  write_back, host_put, device_put_async)

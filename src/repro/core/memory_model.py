@@ -97,25 +97,40 @@ class _Accountant:
 
 def analyze(shapes: PyTree, units: Sequence[Unit], *, optimizer: str = "adamw",
             precision: str = "fp32", mode: str = "hift", m: int = 1,
-            ef_pods: int = 0) -> MemoryReport:
+            ef_pods: int = 0, stream_depth: int = 2,
+            stream_chunk_bytes: int = 1 << 20) -> MemoryReport:
     """shapes: params tree or jax.eval_shape(init) tree.
     precision: fp32 | mixed | mixed_hi.
-    mode: fpft | hift | hift_pipelined | mezo | lomo | adalomo.
+    mode: fpft | fpft_streamed | hift | hift_pipelined | mezo | lomo |
+    adalomo.
     ef_pods >= 2: price the compressed cross-pod reduce's error-feedback
     residual tree — one fp32 copy of whatever gradient tree crosses the
-    wire, PER POD (fpft: the full tree; hift modes: the active group,
-    riding the bundle, so the pipelined schedule holds two).  Only the
-    gradient-reduce strategies (fpft / hift modes) support compression.
+    wire, PER POD (fpft / fpft_streamed: the full tree; hift modes: the
+    active group, riding the bundle, so the pipelined schedule holds
+    ``stream_depth``).  Only the gradient-reduce strategies (fpft modes /
+    hift modes) support compression.
+    stream_depth / stream_chunk_bytes parameterize the bounded device
+    windows (``StreamConfig`` / ``HiFTConfig.pipeline_depth`` defaults
+    match): ``fpft_streamed`` holds ``stream_depth`` chunks of
+    ``stream_chunk_bytes`` per streamed state tree, and
+    ``hift_pipelined`` holds ``stream_depth`` bundles device-resident.
 
     Per-mode accounting (matching the registry strategies' own
     ``peak_trainable_params`` / ``peak_grad_params``):
       - fpft: everything trainable, full grad tree, full optimizer state.
+      - fpft_streamed: everything trainable and the full grad tree (one
+        backward produces it), but optimizer state is HOST-resident and
+        only ``stream_depth * stream_chunk_bytes`` of it per streamed
+        moment tree is ever on device (``core.pipeline.ChunkStream``); the
+        fp32 master under Mixed^Hi is likewise only the active window's
+        chunks (the chunk update casts exactly those to fp32).
       - hift: one group of m units trainable; grads + state for it only.
-      - hift_pipelined: as hift, but the double-buffered bundle pipeline
-        (``core.pipeline``) keeps up to TWO optimizer bundles device-resident
-        (the active group's + one prefetched/draining), so optimizer state —
-        and the fp32 masters riding in the bundles under Mixed^Hi — doubles;
-        gradients stay one group (only the active group has a backward).
+      - hift_pipelined: as hift, but the bundle pipeline
+        (``core.pipeline``) keeps up to ``stream_depth`` optimizer bundles
+        device-resident (the active group's + depth-1 prefetched/draining),
+        so optimizer state — and the fp32 masters riding in the bundles
+        under Mixed^Hi — scales by the window; gradients stay one group
+        (only the active group has a backward).
       - mezo: everything trainable but NO gradients and NO optimizer state
         (two forward passes — memory ~= inference).
       - lomo: everything trainable, no optimizer state, and gradient
@@ -135,7 +150,7 @@ def analyze(shapes: PyTree, units: Sequence[Unit], *, optimizer: str = "adamw",
     hift_modes = ("hift", "hift_pipelined")
     fused_modes = ("lomo", "adalomo")
 
-    if mode == "fpft":
+    if mode in ("fpft", "fpft_streamed"):
         peak, gsize = n, n
     elif mode in hift_modes:
         peak = max(acc.group_params(g) for g in groups)
@@ -147,15 +162,26 @@ def analyze(shapes: PyTree, units: Sequence[Unit], *, optimizer: str = "adamw",
         gsize = max(acc.group_params(g) for g in groups)
     else:
         raise ValueError(mode)
+    if stream_depth < 1 or stream_chunk_bytes <= 0:
+        raise ValueError(f"stream window must be positive, got "
+                         f"depth={stream_depth} x {stream_chunk_bytes} bytes")
     # device-resident optimizer bundles: the pipelined schedule holds the
-    # active group's plus one in flight (never more — the in-flight budget
-    # blocks before a third could land); serial holds exactly one
-    resident_bundles = min(2, len(groups)) if mode == "hift_pipelined" else 1
+    # active group's plus up to depth-1 in flight (never more — the
+    # in-flight budget blocks/evicts first); serial holds exactly one
+    resident_bundles = min(stream_depth, len(groups)) \
+        if mode == "hift_pipelined" else 1
+    # the ChunkStream window, in fp32-equivalent param elements
+    window_elems = stream_depth * stream_chunk_bytes // 4
     # fp32 master copies under Mixed^Hi ride in the bundles: whatever is
     # being updated at one instant (hift: the active group; lomo/adalomo:
-    # one fused grain; mezo: nothing is grad-updated) x resident bundles
-    master = gsize if mode in ("mezo",) + fused_modes \
-        else peak * resident_bundles
+    # one fused grain; fpft_streamed: the device window's chunks; mezo:
+    # nothing is grad-updated) x resident bundles
+    if mode in ("mezo",) + fused_modes:
+        master = gsize
+    elif mode == "fpft_streamed":
+        master = min(n, window_elems)
+    else:
+        master = peak * resident_bundles
 
     # --- weights resident (#Para) ---
     if precision == "fp32":
@@ -179,7 +205,10 @@ def analyze(shapes: PyTree, units: Sequence[Unit], *, optimizer: str = "adamw",
                       tuple((key, 0, ln) for key, ln in acc.stack_len.items()))
         state = acc.group_adafactor_bytes(whole)
     elif optimizer == "adafactor":
-        if mode == "fpft":
+        if mode in ("fpft", "fpft_streamed"):
+            # fpft_streamed would reject adafactor at construction (shape-
+            # coupled factored moments are not stream-safe); price the full
+            # (sub-linear) state so the report stays conservative
             whole = Group(0, tuple(acc.units),
                           tuple(u.key for u in acc.units if u.kind == "dense"),
                           tuple((key, 0, ln) for key, ln in acc.stack_len.items()))
@@ -187,13 +216,20 @@ def analyze(shapes: PyTree, units: Sequence[Unit], *, optimizer: str = "adamw",
         else:
             state = max(acc.group_adafactor_bytes(g)
                         for g in groups) * resident_bundles
+    elif mode == "fpft_streamed":
+        # host-resident moments: device cost is the bounded window — depth
+        # chunks of the base (param) layout, each dragging STATE_MULT fp32
+        # moment slices of the same element count (AdamW: m + v)
+        full = int(_STATE_MULT[optimizer] * 4 * n)
+        window = int(_STATE_MULT[optimizer] * 4 * window_elems)
+        state = min(full, window)
     else:
         state = int(_STATE_MULT[optimizer] * 4 * peak * resident_bundles) \
             if mode in hift_modes else int(_STATE_MULT[optimizer] * 4 * n)
 
     ef = 0
     if ef_pods and ef_pods >= 2:
-        if mode == "fpft":
+        if mode in ("fpft", "fpft_streamed"):
             ef = 4 * ef_pods * n
         elif mode in hift_modes:
             ef = 4 * ef_pods * peak * resident_bundles

@@ -48,6 +48,7 @@ from collections import deque
 from typing import Any, Optional
 
 import jax
+import jax.numpy as jnp
 
 PyTree = Any
 
@@ -181,6 +182,18 @@ class BundlePipeline:
         prefetched copies plus offloads still draining."""
         return active + len(self._prefetched) + len(self._draining)
 
+    def holds(self, key: str, source: PyTree = None) -> bool:
+        """True when a prefetched copy for ``key`` is already in flight —
+        lookahead drivers (:class:`ChunkStream`, the grouped strategies'
+        depth>2 window) use this to avoid re-uploading on every step.  With
+        ``source`` given, the in-flight copy only counts when it was
+        uploaded from that exact host tree (the same identity rule
+        :meth:`fetch` serves under)."""
+        entry = self._prefetched.get(key)
+        if entry is None:
+            return False
+        return source is None or entry[0] is source
+
     def _note_resident(self) -> None:
         self.stats.max_resident = max(self.stats.max_resident,
                                       self.device_resident())
@@ -260,3 +273,187 @@ class BundlePipeline:
         while self._draining:
             jax.block_until_ready(self._draining.popleft())
         self._prefetched.clear()
+
+
+# ----------------------------------------------------- chunk-granular layer
+#
+# ChunkFT-style generalization: instead of moving whole optimizer BUNDLES,
+# partition any params-congruent pytree into fixed-byte chunks and stream
+# the chunks through the same bounded BundlePipeline window.  This is what
+# lets full-parameter AdamW keep its moments host-resident and still update
+# every parameter each step (strategy ``fpft_streamed``): the device never
+# holds more than ``depth`` chunks of optimizer state at once.
+
+
+@dataclasses.dataclass(frozen=True)
+class ChunkLayout:
+    """A fixed-byte chunking of a pytree, by ELEMENT ranges.
+
+    Built once per tree structure (:meth:`build`), a layout partitions the
+    flattened element stream of every dtype bucket (the per-dtype packed
+    grouping of ``kernels.ops._bucket_layout``) into chunks of at most
+    ``chunk_bytes`` bytes.  Chunks never span dtype buckets, so each
+    extracted chunk is ONE 1-D array of uniform dtype.
+
+    The pieces are element ranges ``(leaf_index, start, n)`` — dtype-blind —
+    so one layout built from the param tree applies unchanged to every
+    params-CONGRUENT tree (grads, AdamW's fp32 ``m``/``v``): chunk ``i`` of
+    params, grads and moments always covers the same elements, which is what
+    makes a per-chunk elementwise optimizer update bit-identical to the
+    resident whole-tree update.
+
+    Invariants (property-tested in ``tests/test_chunk_properties.py``):
+    every element of the tree lands in exactly one chunk, and
+    ``combine(extract(tree, i) for i)`` is bit-equal to ``tree``."""
+
+    treedef: Any
+    shapes: tuple            # per-leaf shapes, flatten order
+    chunk_bytes: int
+    # per chunk: tuple of (leaf_index, start_element, n_elements) pieces
+    chunks: tuple
+
+    @classmethod
+    def build(cls, tree: PyTree, chunk_bytes: int) -> "ChunkLayout":
+        """Partition ``tree`` into chunks of at most ``chunk_bytes`` bytes
+        (measured in the tree's own dtypes; at least one element per chunk).
+        Raises ``ValueError`` for a non-positive chunk size."""
+        if chunk_bytes <= 0:
+            raise ValueError(
+                f"chunk_bytes must be > 0, got {chunk_bytes}; a zero-byte "
+                "chunk can hold no element")
+        from repro.kernels.ops import _bucket_layout
+        flat, treedef = jax.tree.flatten(tree)
+        spec = tuple((int(l.size), str(jnp.dtype(l.dtype).name),
+                      str(jnp.dtype(l.dtype).name)) for l in flat)
+        chunks = []
+        for (dtype_name, _), idxs in _bucket_layout(spec):
+            itemsize = jnp.dtype(dtype_name).itemsize
+            per_chunk = max(chunk_bytes // itemsize, 1)
+            pieces, room = [], per_chunk
+            for i in idxs:
+                start, left = 0, spec[i][0]
+                while left:
+                    take = min(left, room)
+                    pieces.append((i, start, take))
+                    start, left, room = start + take, left - take, room - take
+                    if room == 0:
+                        chunks.append(tuple(pieces))
+                        pieces, room = [], per_chunk
+            if pieces:
+                chunks.append(tuple(pieces))
+        return cls(treedef=treedef,
+                   shapes=tuple(tuple(l.shape) for l in flat),
+                   chunk_bytes=int(chunk_bytes), chunks=tuple(chunks))
+
+    @property
+    def num_chunks(self) -> int:
+        return len(self.chunks)
+
+    def extract(self, tree: PyTree, i: int):
+        """Chunk ``i`` of any layout-congruent tree as one 1-D array."""
+        flat = self.treedef.flatten_up_to(tree)
+        parts = [jnp.reshape(flat[li], (-1,))[s:s + n]
+                 for li, s, n in self.chunks[i]]
+        return parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+
+    def combine(self, chunks: list) -> PyTree:
+        """Reassemble a full tree from all ``num_chunks`` chunk arrays —
+        bit-equal to the tree the chunks were extracted from."""
+        if len(chunks) != self.num_chunks:
+            raise ValueError(f"combine needs all {self.num_chunks} chunks, "
+                             f"got {len(chunks)}")
+        segs: dict[int, list] = {}
+        for chunk, pieces in zip(chunks, self.chunks):
+            off = 0
+            for li, start, n in pieces:
+                segs.setdefault(li, []).append((start, chunk[off:off + n]))
+                off += n
+        leaves = []
+        for li, shape in enumerate(self.shapes):
+            parts = [a for _, a in sorted(segs[li], key=lambda t: t[0])]
+            flat = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+            leaves.append(jnp.reshape(flat, shape))
+        return jax.tree.unflatten(self.treedef, leaves)
+
+
+class ChunkStream:
+    """Stream the chunks of one or more congruent host-resident trees
+    through a bounded device window.
+
+    Wraps a :class:`BundlePipeline` (so depth < 2 raises the same
+    ``ValueError`` and the in-flight budget/coherence rules are shared) but
+    keys entries by chunk index and prefetches a LOOKAHEAD window: after
+    serving chunk ``i``, chunks ``i+1 .. i+depth-1`` start uploading, so at
+    most ``depth`` chunks are device-resident while the consumer walks the
+    stream front to back (``stats.max_resident`` asserts it).
+
+    Usage, one sweep per training step::
+
+        stream = ChunkStream(layout, depth=4)
+        stream.begin(m_tree, v_tree)          # snapshot host chunks once
+        for i in range(layout.num_chunks):
+            m_c, v_c = stream.fetch(i)        # device window (hit from i>=1)
+            ...update...
+            stream.offload(i, (new_m_c, new_v_c))
+        new_m, new_v = stream.end()           # reassembled host trees
+
+    ``begin`` extracts every chunk ONCE so prefetch entries keep a stable
+    source identity (the pipeline's coherence rule serves an entry only when
+    its source object matches)."""
+
+    def __init__(self, layout: ChunkLayout, depth: int = 2):
+        self.layout = layout
+        self.pipeline = BundlePipeline(depth)
+        self._source: Optional[list] = None
+        self._done: Optional[list] = None
+
+    @property
+    def depth(self) -> int:
+        return self.pipeline.depth
+
+    @property
+    def stats(self) -> PipelineStats:
+        return self.pipeline.stats
+
+    def begin(self, *trees: PyTree) -> "ChunkStream":
+        """Snapshot the host-side chunks of ``trees`` (all layout-congruent)
+        and prime the lookahead window."""
+        self._source = [tuple(self.layout.extract(t, i) for t in trees)
+                        for i in range(self.layout.num_chunks)]
+        self._done = [None] * self.layout.num_chunks
+        self._lookahead(0)
+        return self
+
+    def _lookahead(self, next_i: int, shardings=None) -> None:
+        # fill the window up to depth-1 chunks ahead of the active one
+        hi = min(next_i + self.depth - 1, self.layout.num_chunks)
+        for j in range(next_i, hi):
+            if not self.pipeline.holds(str(j)):
+                self.pipeline.prefetch(str(j), self._source[j], shardings)
+
+    def fetch(self, i: int, shardings=None) -> tuple:
+        """Device copies of chunk ``i`` of every tree passed to ``begin``,
+        then top up the lookahead window (chunks ``i+1..i+depth-1``)."""
+        if self._source is None:
+            raise RuntimeError("ChunkStream.fetch before begin()")
+        got = self.pipeline.fetch(str(i), self._source[i], shardings)
+        self._lookahead(i + 1, shardings)
+        return got
+
+    def offload(self, i: int, new_chunks: tuple, shardings=None) -> None:
+        """Dispatch chunk ``i``'s updated arrays back to host (deferred
+        drain, as :meth:`BundlePipeline.offload`)."""
+        self._done[i] = self.pipeline.offload(str(i), new_chunks, shardings)
+
+    def end(self) -> list:
+        """Host trees reassembled from every offloaded chunk — one per tree
+        passed to ``begin``, in the same order."""
+        missing = [i for i, c in enumerate(self._done) if c is None]
+        if missing:
+            raise RuntimeError(f"ChunkStream.end with chunks {missing[:4]}... "
+                               "never offloaded")
+        n_trees = len(self._done[0])
+        out = [self.layout.combine([c[t] for c in self._done])
+               for t in range(n_trees)]
+        self._source = self._done = None
+        return out

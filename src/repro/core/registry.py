@@ -9,7 +9,8 @@ entry point for building a training driver:
 
 Everything downstream (train/loop.py, launch/train.py, dry-run, benchmarks,
 examples) programs against this surface;
-``hift|hift_pipelined|fpft|mezo|lisa|lomo|adalomo`` are the built-ins — all
+``hift|hift_pipelined|fpft|fpft_streamed|mezo|lisa|lomo|adalomo`` are the
+built-ins — all
 mesh-aware via ``make_runner(..., mesh=...)`` — and new strategies plug in
 with one ``@register_strategy`` line.  Every entry in
 the registry is held to one shared contract (purity, checkpoint
@@ -84,10 +85,17 @@ def make_runner(cfg, strategy: str = "hift", *, params: Any = None,
       full-tree copies and must opt in explicitly.  Requires ``optimizer``
       given by NAME (one of ``FUSED_OPTIMIZERS``) so the factory can
       rebuild it.
-    - ``pipeline_depth``: >= 2 double-buffers the grouped strategies'
-      host<->device bundle transfers (``repro.core.pipeline``); applies to
-      ``hift``/``hift_pipelined``/``lisa`` and overrides the matching field
-      of an explicit ``hift=``/``lisa=`` config.
+    - ``pipeline_depth``: >= 2 pipelines the host<->device transfers
+      (``repro.core.pipeline``) with a depth-bundle device window.  For the
+      grouped strategies (``hift``/``hift_pipelined``/``lisa``) it overrides
+      the matching field of an explicit ``hift=``/``lisa=`` config (depth-1
+      upcoming bundles prefetch while the active step computes); for
+      ``fpft_streamed`` it sets the ChunkStream window depth (overriding an
+      explicit ``stream=`` config's depth).
+    - ``stream_window``: chunk byte size for ``fpft_streamed``'s bounded
+      device window (``StreamConfig.chunk_bytes``; the ``launch.train``/
+      ``launch.dryrun`` ``--stream-window`` flag lands here).  Only valid
+      with ``strategy="fpft_streamed"``.
 
     Remaining kwargs go to the strategy constructor (``schedule``,
     ``policy``, ``loss_fn``, ``param_sharding_fn``, and per-strategy configs
@@ -97,9 +105,19 @@ def make_runner(cfg, strategy: str = "hift", *, params: Any = None,
 
     import jax
 
-    from repro.core.strategy import HiFTConfig, LiSAConfig, Runner
+    from repro.core.strategy import (HiFTConfig, LiSAConfig, Runner,
+                                     StreamConfig)
     from repro.models import get_family
     from repro.optim import make_optimizer
+
+    stream_window = kwargs.pop("stream_window", None)
+    if stream_window is not None:
+        if strategy != "fpft_streamed":
+            raise ValueError("stream_window sizes fpft_streamed's chunk "
+                             f"window; it does not apply to {strategy!r}")
+        kwargs["stream"] = dataclasses.replace(
+            kwargs.get("stream") or StreamConfig(),
+            chunk_bytes=int(stream_window))
 
     grouped = strategy in ("hift", "hift_pipelined", "lisa")
     if isinstance(optimizer, str):
@@ -129,9 +147,14 @@ def make_runner(cfg, strategy: str = "hift", *, params: Any = None,
             kwargs["lisa"] = dataclasses.replace(
                 kwargs.get("lisa") or LiSAConfig(),
                 pipeline_depth=pipeline_depth)
+        elif strategy == "fpft_streamed":
+            kwargs["stream"] = dataclasses.replace(
+                kwargs.get("stream") or StreamConfig(),
+                depth=pipeline_depth)
         else:
-            raise ValueError("pipeline_depth applies to the grouped "
-                             f"strategies (hift/lisa), not {strategy!r}")
+            raise ValueError("pipeline_depth applies to the pipelined "
+                             "strategies (hift/lisa/fpft_streamed), not "
+                             f"{strategy!r}")
     if params is None:
         params = get_family(cfg).init(cfg, jax.random.PRNGKey(seed))
     if rng is None:

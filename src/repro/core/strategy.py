@@ -43,8 +43,15 @@ Built-in strategies (registered in ``repro.core.registry``):
   - ``hift_pipelined`` : HiFT with the double-buffered bundle pipeline
                (``repro.core.pipeline``) on by default — next group's
                optimizer bundle uploads while the current step computes;
-               bit-identical to ``hift``, at most 2 bundles device-resident
-               (see ``docs/performance.md``).
+               bit-identical to ``hift``, at most ``pipeline_depth``
+               bundles device-resident (see ``docs/performance.md``).
+  - ``fpft_streamed`` : ChunkFT-style full-parameter fine-tuning — FPFT's
+               update with the optimizer moments host-resident, streamed
+               chunk-by-chunk through a bounded device window
+               (``core.pipeline.ChunkStream``) during the update.
+               Bit-identical to ``fpft`` with the same (stream-safe)
+               optimizer; optimizer-state device residency drops from
+               2*zeta_1 to ``depth * chunk_bytes``.
 
 Every strategy is also **mesh-aware**: pass ``mesh=`` (a
 ``jax.sharding.Mesh`` with ``data``/``model`` axes, e.g. from
@@ -74,7 +81,8 @@ from repro.dist import shardings as dist_shardings
 from repro.dist.compress import compress_tree_with_feedback, init_residuals
 from repro.core.grouping import (Group, group_cut, make_groups, merge_params,
                                  order_groups, split_params)
-from repro.core.pipeline import BundlePipeline, device_put_async, host_put
+from repro.core.pipeline import (BundlePipeline, ChunkLayout, ChunkStream,
+                                 device_put_async, host_put)
 from repro.core.registry import register_strategy
 from repro.core.scheduler import LRSchedule
 from repro.models import get_family, unit_first_depth
@@ -181,6 +189,32 @@ class CrossPodConfig:
     checkpoint, offload and conformance-test like everything else."""
     pods: int = 2
     compress: bool = True
+
+
+@dataclasses.dataclass
+class StreamConfig:
+    """Chunk-granular state streaming (``core.pipeline.ChunkStream``).
+
+    ``chunk_bytes`` is the packed byte budget of one stream chunk — the unit
+    the host<->device window moves, measured against the layout's BASE tree
+    (congruent trees of wider dtypes move proportionally more bytes per
+    chunk).  ``depth`` is the maximum device-resident chunks per streamed
+    tree, the ChunkFT analogue of ``HiFTConfig.pipeline_depth``: depth-1
+    chunks of lookahead upload while the active chunk's update runs.
+    Consumed by ``fpft_streamed`` (host-resident AdamW moments stream
+    through the window during the update) and by the LOMO/AdaLomo
+    segment-streaming opt-in."""
+    chunk_bytes: int = 1 << 20
+    depth: int = 2
+
+    def __post_init__(self):
+        if self.chunk_bytes <= 0:
+            raise ValueError(
+                f"stream chunk_bytes must be > 0, got {self.chunk_bytes}")
+        if self.depth < 2:
+            raise ValueError(
+                f"stream depth must be >= 2, got {self.depth}; the serial "
+                "(resident) path is plain 'fpft'")
 
 
 def crosspod_reduce(loss_and_grad: Callable, params: PyTree, batch,
@@ -490,25 +524,18 @@ class _GroupedStrategy(Strategy):
         self._pipeline: Optional[BundlePipeline] = None
 
     def _setup_pipeline(self, depth: int) -> None:
-        """Enable the double-buffered bundle pipeline (``core.pipeline``)
-        when ``depth`` >= 2 and there is actually something to overlap
-        (offloading on, more than one group).  Switches the strategy's
-        memory accounting to mode ``hift_pipelined`` — up to 2 bundles
-        device-resident instead of 1.
-
-        Depth is capped at 2 for now: ``memory_model``/``dryrun`` account
-        exactly one extra resident bundle, so a deeper lookahead would
-        under-report device memory (ROADMAP lists depth>2 as a follow-up;
-        ``BundlePipeline`` itself already handles arbitrary depth)."""
+        """Enable the bundle pipeline (``core.pipeline``) when ``depth`` >= 2
+        and there is actually something to overlap (offloading on, more than
+        one group).  Switches the strategy's memory accounting to mode
+        ``hift_pipelined`` with a ``depth``-bundle device window: the active
+        bundle plus up to depth-1 chunks of lookahead (``memory_model``'s
+        ``stream_depth`` and dryrun's per-device adjustment both scale with
+        it, so deeper windows stay honestly priced)."""
         if depth <= 1 or not self.offload_optimizer or self.k <= 1:
             return
-        if depth > 2:
-            raise ValueError(
-                f"pipeline_depth={depth} not supported yet: the memory "
-                "accounting (memory_model mode 'hift_pipelined', dryrun) "
-                "covers exactly 2 device-resident bundles — use 2")
         self._pipeline = BundlePipeline(depth)
         self.memory_mode = "hift_pipelined"
+        self.memory_stream_depth = depth
 
     def _cast_params(self, params: PyTree) -> PyTree:
         policy = self.policy
@@ -623,7 +650,7 @@ class _GroupedStrategy(Strategy):
         return dist_shardings.bundle_shardings(bundle, self.mesh)
 
     def _group_step(self, state: TrainState, batch, gi: int, lr: float,
-                    next_gi: Optional[int] = None
+                    next_gis: Optional[list] = None
                     ) -> tuple[PyTree, PyTree, jnp.ndarray]:
         group = self.groups[gi]
         active, frozen = split_params(state.params, group)
@@ -648,15 +675,24 @@ class _GroupedStrategy(Strategy):
                     (active, frozen, bundle, batch), ins[:4])
             new_active, new_bundle, loss = fn(active, frozen, bundle,
                                               batch, lr)
-        if pipe is not None and next_gi is not None and next_gi != gi:
-            # the step above is DISPATCHED, not done: start the next group's
-            # upload now so it overlaps this step's compute.  First-visit
-            # groups have no bundle yet (the step inits one) — nothing to
-            # prefetch then.
-            nbundle = state.opt_state.get(str(next_gi))
-            if nbundle is not None:
-                pipe.prefetch(str(next_gi), nbundle,
-                              self._bundle_placement(nbundle))
+        if pipe is not None and next_gis:
+            # the step above is DISPATCHED, not done: start the upcoming
+            # groups' uploads now so they overlap this step's compute.  With
+            # depth > 2 the lookahead window covers depth-1 future visits
+            # (the pipeline's in-flight budget evicts/blocks past that, so
+            # residency never exceeds depth bundles).  First-visit groups
+            # have no bundle yet (the step inits one) — nothing to prefetch;
+            # revisits of gi inside the window are skipped (its bundle is
+            # the one this step is updating).
+            seen = {gi}
+            for ngi in next_gis:
+                if ngi in seen:
+                    continue
+                seen.add(ngi)
+                nbundle = state.opt_state.get(str(ngi))
+                if nbundle is not None and not pipe.holds(str(ngi), nbundle):
+                    pipe.prefetch(str(ngi), nbundle,
+                                  self._bundle_placement(nbundle))
         if self.offload_optimizer:
             new_bundle = (pipe.offload(key, new_bundle, bspec)
                           if pipe is not None
@@ -721,12 +757,15 @@ class HiFTStrategy(_GroupedStrategy):
         step = int(state.step)
         order = self._order_at(state)
         gi = order[step % self.k]
-        # the sweep order makes step+1's group knowable NOW — that is what
-        # the bundle pipeline exploits (prefetch while this step computes)
-        next_gi = order[(step + 1) % self.k] if self._pipeline else None
+        # the sweep order makes the next depth-1 groups knowable NOW — that
+        # is what the bundle pipeline exploits (prefetch while this step
+        # computes; depth > 2 widens the lookahead window)
+        next_gis = ([order[(step + d) % self.k]
+                     for d in range(1, self._pipeline.depth)]
+                    if self._pipeline else None)
         lr = self.schedule.delayed(step, self.k)
         params, opt_state, loss = self._group_step(state, batch, gi, lr,
-                                                   next_gi=next_gi)
+                                                   next_gis=next_gis)
         new_state = TrainState(params, opt_state, step + 1, state.extra)
         return new_state, {"loss": loss, "lr": lr, "strategy": self.name,
                            "group": self.groups[gi].label()}
@@ -803,12 +842,15 @@ class LiSAStrategy(_GroupedStrategy):
     def step(self, state: TrainState, batch) -> tuple[TrainState, Metrics]:
         step = int(state.step)
         gi = self.group_index_at(step)
-        # the sample is a pure fn of (seed, step), so step+1's group is
-        # knowable now; the pipeline skips prefetch when it resamples to gi
-        next_gi = self.group_index_at(step + 1) if self._pipeline else None
+        # the sample is a pure fn of (seed, step), so the next depth-1
+        # groups are knowable now; the pipeline skips prefetch when the
+        # sampler lands back on gi inside the window
+        next_gis = ([self.group_index_at(step + d)
+                     for d in range(1, self._pipeline.depth)]
+                    if self._pipeline else None)
         lr = self.lr_at(step)
         params, opt_state, loss = self._group_step(state, batch, gi, lr,
-                                                   next_gi=next_gi)
+                                                   next_gis=next_gis)
         new_state = TrainState(params, opt_state, step + 1, state.extra)
         return new_state, {"loss": loss, "lr": lr, "strategy": self.name,
                            "group": self.groups[gi].label()}
@@ -963,6 +1005,242 @@ class FPFTStrategy(Strategy):
                 args = jax.device_put(args, ins[:3])
             params, opt_state, loss = fn(*args, jnp.asarray(lr, jnp.float32))
         new_state = TrainState(params, opt_state, step + 1, state.extra)
+        return new_state, {"loss": loss, "lr": lr, "strategy": self.name}
+
+
+# --------------------------------------------------------- FPFT (streamed)
+
+def fpft_grad_body(cfg, policy: Policy = FP32,
+                   loss_fn: Optional[Callable] = None) -> Callable:
+    """The gradient HALF of the full-parameter step: ``grads(params, batch)
+    -> (loss, grads)``.  ``fpft_streamed`` jits this alone (no donation —
+    the pre-step params feed the chunked update afterwards) and applies the
+    optimizer chunk-by-chunk on the host-driven :class:`ChunkStream` loop;
+    sharded it compiles under ``dist.shardings.fpft_grad_shardings``."""
+    model = get_family(cfg)
+    loss_fn = loss_fn or model.loss_fn
+
+    def grads(params, batch):
+        def loss_of(p):
+            return loss_fn(cfg, p, batch, compute_dtype=policy.compute_dtype)
+
+        return jax.value_and_grad(loss_of)(params)
+
+    return grads
+
+
+def fpft_crosspod_grad_body(cfg, policy: Policy = FP32,
+                            loss_fn: Optional[Callable] = None,
+                            cross_pod: Optional[CrossPodConfig] = None
+                            ) -> Callable:
+    """:func:`fpft_grad_body` with the cross-pod reduce in the gradient
+    path: ``grads(params, residuals, batch) -> (loss, grads, new_residuals)``
+    (sharded: ``dist.shardings.fpft_crosspod_grad_shardings``)."""
+    model = get_family(cfg)
+    loss_fn = loss_fn or model.loss_fn
+    cp = cross_pod if cross_pod is not None else CrossPodConfig()
+
+    def grads(params, residuals, batch):
+        def loss_and_grad(b):
+            return jax.value_and_grad(
+                lambda p: loss_fn(cfg, p, b,
+                                  compute_dtype=policy.compute_dtype))(params)
+
+        g, new_res, loss = crosspod_reduce(loss_and_grad, params, batch,
+                                           residuals, cp)
+        return loss, g, new_res
+
+    return grads
+
+
+@register_strategy("fpft_streamed")
+class StreamedFPFTStrategy(FPFTStrategy):
+    """ChunkFT-style full-parameter fine-tuning: FPFT's update with the
+    optimizer moments HOST-resident, streamed through a bounded device
+    window during the update instead of living on device.
+
+    The step splits in two.  (1) One jitted backward produces the full
+    gradient tree (``fpft_grad_body`` — params are NOT donated; the
+    pre-step values feed the update).  (2) A host-driven loop walks the
+    :class:`ChunkLayout` partition of the param tree: for chunk i the
+    stream uploads the congruent moment slices (``m``/``v`` for AdamW)
+    while chunks ``i+1..i+depth-1`` prefetch behind it, one jitted
+    elementwise ``optimizer.update`` call advances that chunk, and the
+    updated moments drain back to host.  Device residency of optimizer
+    state is therefore ``depth * chunk_bytes``-bounded (``memory_model``
+    mode ``fpft_streamed``) instead of ``2 * zeta_1`` — the difference
+    that fits 7B full-parameter AdamW on one 48 GB device under Mixed^Hi.
+
+    Requires a **stream-safe** optimizer (``Optimizer.stream_safe``): the
+    update must be elementwise with no cross-leaf coupling, so applying it
+    per chunk is the SAME arithmetic as the resident tree-at-once update —
+    bit-identical, through mid-stream checkpoint resume (test-enforced;
+    checkpoints are interchangeable with plain ``fpft``, the stream is a
+    transfer schedule, not state).  A global grad clip couples every leaf
+    through one norm and is rejected at construction.
+
+    Scalar state entries (AdamW's ``count``) ride every chunk call and keep
+    the value from the last one — each chunk sees the same pre-step count,
+    exactly as the resident update does."""
+
+    name = "fpft_streamed"
+    memory_mode = "fpft_streamed"
+
+    def __init__(self, cfg, optimizer, *, stream: Optional[StreamConfig] = None,
+                 **kwargs):
+        super().__init__(cfg, optimizer, **kwargs)
+        self.stream = stream if stream is not None else StreamConfig()
+        if not getattr(optimizer, "stream_safe", False):
+            raise ValueError(
+                "fpft_streamed needs a stream-safe optimizer (elementwise "
+                "update with no cross-leaf coupling; Optimizer.stream_safe) "
+                f"— got {getattr(optimizer, 'name', optimizer)!r} with "
+                "stream_safe=False.  Turn off grad_clip / the fused-kernel "
+                "path, or use the resident 'fpft' strategy")
+        self._grad_fn: Optional[tuple[Callable, Any]] = None
+        self._chunk_fn: Optional[Callable] = None
+        self.memory_stream_depth = self.stream.depth
+        self.memory_stream_chunk_bytes = self.stream.chunk_bytes
+
+    # ----------------------------------------------------------- gradients
+
+    def _gfn(self, example=None) -> tuple[Callable, Any]:
+        if self._grad_fn is None:
+            if self._cross_pod_on:
+                body = fpft_crosspod_grad_body(self.cfg, self.policy,
+                                               self.loss_fn, self.cross_pod)
+                if self.sharded and example is not None:
+                    ins, outs = dist_shardings.fpft_crosspod_grad_shardings(
+                        self.mesh, *example,
+                        param_shardings_tree=self.param_shardings(example[0]))
+                    self._grad_fn = jax.jit(body, in_shardings=ins,
+                                            out_shardings=outs), ins
+                else:
+                    self._grad_fn = jax.jit(body), None
+            else:
+                body = fpft_grad_body(self.cfg, self.policy, self.loss_fn)
+                if self.sharded and example is not None:
+                    ins, outs = dist_shardings.fpft_grad_shardings(
+                        self.mesh, *example,
+                        param_shardings_tree=self.param_shardings(example[0]))
+                    self._grad_fn = jax.jit(body, in_shardings=ins,
+                                            out_shardings=outs), ins
+                else:
+                    self._grad_fn = jax.jit(body), None
+        return self._grad_fn
+
+    # -------------------------------------------------------- chunk update
+
+    def _split_state(self, opt_state: PyTree,
+                     params: PyTree) -> tuple[dict, dict]:
+        """Partition ``opt_state`` into params-CONGRUENT subtrees (same
+        structure and leaf shapes — AdamW's ``m``/``v``; these stream) and
+        the rest (scalars like ``count``; these ride every chunk call)."""
+        pdef = jax.tree.structure(params)
+        pshapes = tuple(tuple(l.shape) for l in jax.tree.leaves(params))
+        streamed, resident = {}, {}
+        for key, sub in opt_state.items():
+            leaves, sdef = jax.tree.flatten(sub)
+            if (sdef == pdef
+                    and tuple(tuple(l.shape) for l in leaves) == pshapes):
+                streamed[key] = sub
+            else:
+                resident[key] = sub
+        return streamed, resident
+
+    def _chunk_update(self) -> Callable:
+        """One jitted elementwise optimizer call over single-chunk trees
+        (jax re-specializes per chunk shape; layouts cut at most two
+        distinct chunk sizes per dtype bucket, so this stays a handful of
+        compilations)."""
+        if self._chunk_fn is None:
+            opt = self.optimizer
+            self._chunk_fn = jax.jit(
+                lambda g, st, p, lr: opt.update(g, st, p, lr))
+        return self._chunk_fn
+
+    def _streamed_update(self, params: PyTree, grads: PyTree,
+                         opt_state: PyTree, lr) -> tuple[PyTree, PyTree]:
+        """The ChunkFT update sweep: moments in through the bounded window,
+        one chunk updated per jitted call, updated moments drained to host.
+        Returns ``(new_params, new_opt_state)`` bit-identical to
+        ``optimizer.update(grads, opt_state, params, lr)``."""
+        layout = ChunkLayout.build(params, self.stream.chunk_bytes)
+        streamed, resident = self._split_state(opt_state, params)
+        skeys = sorted(streamed)
+        stream = ChunkStream(layout, depth=self.stream.depth)
+        stream.begin(*(streamed[key] for key in skeys))
+        upd = self._chunk_update()
+        lr = jnp.asarray(lr, jnp.float32)
+        p_chunks = []
+        new_resident = dict(resident)
+        for i in range(layout.num_chunks):
+            schunks = stream.fetch(i)
+            pc = layout.extract(params, i)
+            gc = layout.extract(grads, i)
+            if self.sharded:
+                window = (pc, gc) + tuple(schunks)
+                window = jax.device_put(
+                    window,
+                    dist_shardings.chunk_window_shardings(window, self.mesh))
+                pc, gc = window[0], window[1]
+                schunks = window[2:]
+            st = {key: {"_c": c} for key, c in zip(skeys, schunks)}
+            st.update(resident)
+            new_p, new_st = upd({"_c": gc}, st, {"_c": pc}, lr)
+            p_chunks.append(new_p["_c"])
+            for key in resident:
+                new_resident[key] = new_st[key]
+            stream.offload(i, tuple(new_st[key]["_c"] for key in skeys))
+        new_params = layout.combine(p_chunks)
+        if self.sharded:
+            new_params = jax.device_put(
+                new_params, self.resident_param_shardings(new_params))
+        new_streamed = stream.end()
+        new_opt = dict(new_resident)
+        # re-pin the reassembled moments host-side (combine computes on
+        # device; host_put is the identity on CPU backends)
+        new_opt.update({key: host_put(tree)
+                        for key, tree in zip(skeys, new_streamed)})
+        return new_params, new_opt
+
+    # ---------------------------------------------------------------- api
+
+    def init(self, params: PyTree, rng=None) -> TrainState:
+        state = super().init(params, rng)
+        streamed, resident = self._split_state(state.opt_state, state.params)
+        if streamed:
+            opt = dict(resident)
+            opt.update({key: host_put(sub) for key, sub in streamed.items()})
+            state = state.replace(opt_state=opt)
+        return state
+
+    def step(self, state: TrainState, batch) -> tuple[TrainState, Metrics]:
+        step = int(state.step)
+        lr = self.schedule.at_cycle(step)
+        params = state.params
+        extra = state.extra
+        if self._cross_pod_on:
+            residuals = (state.extra or {}).get("ef_residual", {})
+            with self._trace_ctx():
+                fn, ins = self._gfn((params, residuals, batch))
+                args = (params, residuals, batch)
+                if ins is not None:
+                    args = jax.device_put(args, ins[:3])
+                loss, grads, new_res = fn(*args)
+            if self.cross_pod.compress:
+                extra = dict(state.extra or {})
+                extra["ef_residual"] = new_res
+        else:
+            with self._trace_ctx():
+                fn, ins = self._gfn((params, batch))
+                args = (params, batch)
+                if ins is not None:
+                    args = jax.device_put(args, ins[:2])
+                loss, grads = fn(*args)
+        new_params, new_opt = self._streamed_update(params, grads,
+                                                    state.opt_state, lr)
+        new_state = TrainState(new_params, new_opt, step + 1, extra)
         return new_state, {"loss": loss, "lr": lr, "strategy": self.name}
 
 
@@ -1583,6 +1861,51 @@ class _FusedBackwardStrategy(Strategy):
                 self.memory_m = self._pieces.liveness_m
         self._step_fn: Optional[tuple[Callable, Any]] = None
 
+    def _setup_stream(self, stream: Optional["StreamConfig"]) -> None:
+        """Opt-in segment streaming (``stream=StreamConfig(...)``) for
+        host-resident trees: the step's input segments (params; AdaLomo's
+        factored moments too) upload through a ``depth``-bounded
+        :class:`BundlePipeline` window — segment s+1's upload is dispatched
+        while segment s's is still in flight, overlapping the transfers
+        with each other and (async dispatch) with the previous step's
+        compute — and the updated segments drain back to host after the
+        step, off the critical path.  The jitted reverse scan itself still
+        consumes the fully-uploaded tree (splitting the scan per segment is
+        a ROADMAP follow-up), so this bounds transfer STAGING, not step
+        residency; states are bit-identical to the unstreamed schedule
+        (transfers only — test-enforced)."""
+        self.stream = stream
+        self._seg_pipe = (BundlePipeline(stream.depth)
+                          if stream is not None else None)
+
+    def _stream_in(self, tree: PyTree, prefix: str) -> PyTree:
+        """Upload a dict-of-segments through the bounded window (no-op when
+        streaming is off).  Pipeline keys are ``prefix:segment`` so params
+        and moments share one window budget without colliding."""
+        pipe = self._seg_pipe
+        if pipe is None or not isinstance(tree, dict) or not tree:
+            return tree
+        keys = list(tree)
+        out = {}
+        for i, key in enumerate(keys):
+            # keep depth-1 segment uploads in flight ahead of the active one
+            for j in range(i, min(i + pipe.depth - 1, len(keys))):
+                kj = f"{prefix}:{keys[j]}"
+                if not pipe.holds(kj, tree[keys[j]]):
+                    pipe.prefetch(kj, tree[keys[j]], None)
+            out[key] = pipe.fetch(f"{prefix}:{key}", tree[key], None)
+        return out
+
+    def _stream_out(self, tree: PyTree, prefix: str) -> PyTree:
+        """Deferred host offload of a step's output segments (no-op when
+        streaming is off): D2H copies dispatch now and drain while the next
+        step runs (:meth:`BundlePipeline.offload`)."""
+        pipe = self._seg_pipe
+        if pipe is None or not isinstance(tree, dict) or not tree:
+            return tree
+        return {key: pipe.offload(f"{prefix}:{key}", sub)
+                for key, sub in tree.items()}
+
     def _step_shardings(self, example):
         raise NotImplementedError
 
@@ -1633,12 +1956,19 @@ class LOMOStrategy(_FusedBackwardStrategy):
     def __init__(self, cfg, optimizer=None, *, lomo: Optional[LOMOConfig] = None,
                  schedule: Optional[LRSchedule] = None, policy: Policy = FP32,
                  loss_fn: Optional[Callable] = None, mesh=None,
-                 param_sharding_fn: Optional[Callable] = None):
+                 param_sharding_fn: Optional[Callable] = None,
+                 cross_pod: Optional[CrossPodConfig] = None,
+                 stream: Optional[StreamConfig] = None):
+        # cross_pod is forwarded so the base class rejects it with the
+        # uniform unsupported-declaration error (the fused backward has no
+        # whole-gradient-tree reduce point to compress)
         super().__init__(cfg, optimizer, schedule=schedule, policy=policy,
                          loss_fn=loss_fn, mesh=mesh,
-                         param_sharding_fn=param_sharding_fn)
+                         param_sharding_fn=param_sharding_fn,
+                         cross_pod=cross_pod)
         self.lomo = lomo if lomo is not None else LOMOConfig()
         self._setup_fused(loss_fn)
+        self._setup_stream(stream)
         self._body = lomo_step_body(cfg, policy=self.policy, loss_fn=loss_fn,
                                     lomo=self.lomo, pieces=self._pieces)
 
@@ -1655,12 +1985,14 @@ class LOMOStrategy(_FusedBackwardStrategy):
     def step(self, state: TrainState, batch) -> tuple[TrainState, Metrics]:
         step = int(state.step)
         lr = self.schedule.at_cycle(step)
+        params_in = self._stream_in(state.params, "p")
         with self._trace_ctx():
-            fn, ins = self._fn((state.params, batch))
-            args = (state.params, batch)
+            fn, ins = self._fn((params_in, batch))
+            args = (params_in, batch)
             if ins is not None:
                 args = jax.device_put(args, ins[:2])
             params, loss, gnorm = fn(*args, jnp.asarray(lr, jnp.float32))
+        params = self._stream_out(params, "p")
         new_state = TrainState(params, state.opt_state, step + 1, state.extra)
         return new_state, {"loss": loss, "lr": lr, "strategy": self.name,
                            "grad_norm": gnorm}
@@ -1698,12 +2030,18 @@ class AdaLomoStrategy(_FusedBackwardStrategy):
                  adalomo: Optional[AdaLomoConfig] = None,
                  schedule: Optional[LRSchedule] = None, policy: Policy = FP32,
                  loss_fn: Optional[Callable] = None, mesh=None,
-                 param_sharding_fn: Optional[Callable] = None):
+                 param_sharding_fn: Optional[Callable] = None,
+                 cross_pod: Optional[CrossPodConfig] = None,
+                 stream: Optional[StreamConfig] = None):
+        # cross_pod is forwarded so the base class rejects it with the
+        # uniform unsupported-declaration error (as LOMO)
         super().__init__(cfg, optimizer, schedule=schedule, policy=policy,
                          loss_fn=loss_fn, mesh=mesh,
-                         param_sharding_fn=param_sharding_fn)
+                         param_sharding_fn=param_sharding_fn,
+                         cross_pod=cross_pod)
         self.adalomo = adalomo if adalomo is not None else AdaLomoConfig()
         self._setup_fused(loss_fn)
+        self._setup_stream(stream)
         self._body = adalomo_step_body(cfg, policy=self.policy,
                                        loss_fn=loss_fn, adalomo=self.adalomo,
                                        pieces=self._pieces)
@@ -1727,13 +2065,22 @@ class AdaLomoStrategy(_FusedBackwardStrategy):
     def step(self, state: TrainState, batch) -> tuple[TrainState, Metrics]:
         step = int(state.step)
         lr = self.schedule.at_cycle(step)
+        params_in = self._stream_in(state.params, "p")
+        opt_in = state.opt_state
+        if self._seg_pipe is not None:
+            opt_in = dict(opt_in)
+            opt_in["moments"] = self._stream_in(opt_in["moments"], "m")
         with self._trace_ctx():
-            fn, ins = self._fn((state.params, state.opt_state, batch))
-            args = (state.params, state.opt_state, batch)
+            fn, ins = self._fn((params_in, opt_in, batch))
+            args = (params_in, opt_in, batch)
             if ins is not None:
                 args = jax.device_put(args, ins[:3])
             params, opt_state, loss, gnorm = fn(*args,
                                                 jnp.asarray(lr, jnp.float32))
+        params = self._stream_out(params, "p")
+        if self._seg_pipe is not None:
+            opt_state = dict(opt_state)
+            opt_state["moments"] = self._stream_out(opt_state["moments"], "m")
         new_state = TrainState(params, opt_state, step + 1, state.extra)
         return new_state, {"loss": loss, "lr": lr, "strategy": self.name,
                            "grad_norm": gnorm}

@@ -240,6 +240,51 @@ def fpft_crosspod_step_shardings(mesh, params: PyTree, opt_state: PyTree,
             (p, o, r, scalar))
 
 
+def fpft_grad_shardings(mesh, params: PyTree, batch: PyTree,
+                        param_shardings_tree: PyTree = None):
+    """``(in_shardings, out_shardings)`` for the gradient-only body the
+    streamed full-parameter strategy (``fpft_streamed``) splits off:
+    ``grads(params, batch) -> (loss, grads)``.  The gradient tree comes out
+    under the param placement, so the host-driven chunk loop that follows
+    slices both trees congruently."""
+    scalar = NamedSharding(mesh, P())
+    p = param_shardings_tree if param_shardings_tree is not None \
+        else param_shardings(params, mesh)
+    return (p, batch_shardings(batch, mesh)), (scalar, p)
+
+
+def fpft_crosspod_grad_shardings(mesh, params: PyTree, residuals: PyTree,
+                                 batch: PyTree,
+                                 param_shardings_tree: PyTree = None):
+    """As :func:`fpft_grad_shardings` with the cross-pod reduce in the
+    gradient path: ``grads(params, residuals, batch) -> (loss, grads,
+    residuals)`` — identical residual specs in and out."""
+    scalar = NamedSharding(mesh, P())
+    p = param_shardings_tree if param_shardings_tree is not None \
+        else param_shardings(params, mesh)
+    r = crosspod_residual_shardings(residuals, mesh)
+    return (p, r, batch_shardings(batch, mesh)), (scalar, p, r)
+
+
+def chunk_window_shardings(chunks: PyTree, mesh) -> PyTree:
+    """Placement for a ``ChunkStream`` device window: chunks are 1-D
+    per-dtype element streams, so dim 0 shards over ``model`` when the
+    length divides, else the chunk replicates.  The per-chunk optimizer
+    update uses the SAME spec for its donated inputs and its outputs, so
+    donation never forces a re-layout (the rule every ``*_step_shardings``
+    helper here holds to)."""
+    size = _sizes(mesh).get(_MODEL_AXIS, 1)
+
+    def one(leaf):
+        shape = getattr(leaf, "shape", ())
+        if (size > 1 and getattr(leaf, "ndim", 0) == 1 and shape
+                and shape[0] >= size and shape[0] % size == 0):
+            return _named(mesh, 1, {0: _MODEL_AXIS})
+        return NamedSharding(mesh, P())
+
+    return jax.tree.map(one, chunks)
+
+
 def mezo_step_shardings(mesh, params: PyTree, batch: PyTree,
                         param_shardings_tree: PyTree = None):
     """``(in_shardings, out_shardings)`` for the zeroth-order step

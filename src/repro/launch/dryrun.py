@@ -153,7 +153,8 @@ def _abstract_params(cfg: ArchConfig, dtype=jnp.bfloat16):
 
 def lower_train_cell(cfg: ArchConfig, shape: ShapeConfig, mesh,
                      strategy: str = "hift", fused_update: bool = False,
-                     crosspod_pods: int = 0):
+                     crosspod_pods: int = 0, stream_window: int = 1 << 20,
+                     stream_depth: int = 2):
     """Build + lower + compile the train step of ``strategy`` for a cell.
 
     Lowering needs abstract shapes and explicit shardings, so the cell step
@@ -163,9 +164,9 @@ def lower_train_cell(cfg: ArchConfig, shape: ShapeConfig, mesh,
     ``fused_update`` lowers the optimizer update through the Pallas fused
     kernels instead of the unfused elementwise chain, proving the fused hot
     path partitions under GSPMD for the cell."""
-    if strategy not in ("hift", "fpft", "lomo", "adalomo"):
-        raise ValueError("dry-run lowers hift|fpft|lomo|adalomo cells, "
-                         f"got {strategy!r}")
+    if strategy not in ("hift", "fpft", "fpft_streamed", "lomo", "adalomo"):
+        raise ValueError("dry-run lowers hift|fpft|fpft_streamed|lomo|"
+                         f"adalomo cells, got {strategy!r}")
     fpft = strategy == "fpft"
     model = get_family(cfg)
     params_s = _abstract_params(cfg)
@@ -175,6 +176,32 @@ def lower_train_cell(cfg: ArchConfig, shape: ShapeConfig, mesh,
     bshard = batch_shardings(batch_s, mesh)
     lr_s = jax.ShapeDtypeStruct((), jnp.float32)
     lr_shard = NamedSharding(mesh, P())
+
+    if strategy == "fpft_streamed":
+        # the ChunkFT cell lowers the gradient HALF of the streamed step
+        # (the one device-wide computation; the chunked optimizer update is
+        # a host-driven loop of window-sized elementwise calls — its device
+        # cost is the bounded moment window, priced into the per-device
+        # memory by run_cell below, matching memory_model mode
+        # "fpft_streamed").  bf16 compute, params NOT donated (the pre-step
+        # values feed the chunk update).
+        from repro.core.strategy import fpft_grad_body
+        from repro.dist.shardings import fpft_grad_shardings
+        from repro.optim.mixed_precision import BF16
+        step = fpft_grad_body(cfg, policy=BF16)
+        ins, outs = fpft_grad_shardings(mesh, params_s, batch_s,
+                                        param_shardings_tree=pshard)
+        fn = jax.jit(step, in_shardings=ins, out_shardings=outs)
+        with mesh, activation_sharding(mesh, _daxes(mesh)):
+            lowered = fn.lower(params_s, batch_s)
+        # AdamW window: depth chunks in flight, each dragging fp32 m+v
+        # slices congruent to the chunk's (bf16-resident) param elements
+        elems_per_chunk = stream_window // 2
+        window_bytes = stream_depth * 2 * 4 * elems_per_chunk
+        return lowered, {"mode": "fpft_streamed",
+                         "stream_window_bytes": int(window_bytes),
+                         "stream_depth": int(stream_depth),
+                         "stream_chunk_bytes": int(stream_window)}
 
     if strategy == "lomo":
         # the fused-backward step: full-param SGD fused into the backward,
@@ -397,7 +424,8 @@ def lower_serve_cell(cfg: ArchConfig, shape: ShapeConfig, mesh,
 def run_cell(arch_id: str, shape_name: str, multi_pod: bool = False,
              strategy: str = "hift", save: bool = True,
              fused_update: bool = False, pipeline_depth: int = 1,
-             paged: bool = False, crosspod_pods: int = 0) -> dict:
+             paged: bool = False, crosspod_pods: int = 0,
+             stream_window: int = 1 << 20) -> dict:
     cfg = get_config(arch_id)
     shape = SHAPES[shape_name]
     ok, why = cell_supported(cfg, shape)
@@ -416,7 +444,10 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool = False,
             lowered, meta = lower_train_cell(cfg, shape, mesh,
                                              strategy=strategy,
                                              fused_update=fused_update,
-                                             crosspod_pods=crosspod_pods)
+                                             crosspod_pods=crosspod_pods,
+                                             stream_window=stream_window,
+                                             stream_depth=max(pipeline_depth,
+                                                              2))
             meta["fused_update"] = fused_update
             meta["pipeline_depth"] = pipeline_depth
         else:
@@ -459,13 +490,20 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool = False,
 
     per_dev_bytes = (mem.argument_size_in_bytes + mem.temp_size_in_bytes
                      + mem.output_size_in_bytes - mem.alias_size_in_bytes)
+    model_size = dict(zip(mesh.axis_names, mesh.devices.shape)) \
+        .get("model", 1)
     if meta.get("mode") == "hift" and pipeline_depth > 1:
-        # the bundle pipeline holds ONE extra bundle device-resident
-        # (prefetched or draining) beyond the step's own arguments; the
-        # bundle shards over the model axis, so per device it is /model
-        model_size = dict(zip(mesh.axis_names, mesh.devices.shape)) \
-            .get("model", 1)
-        per_dev_bytes += meta["bundle_bytes"] // max(model_size, 1)
+        # the bundle pipeline holds up to depth-1 extra bundles device-
+        # resident (prefetched or draining) beyond the step's own
+        # arguments; bundles shard over the model axis, so per device each
+        # is /model
+        per_dev_bytes += ((pipeline_depth - 1) * meta["bundle_bytes"]
+                          // max(model_size, 1))
+    if meta.get("mode") == "fpft_streamed":
+        # the ChunkStream moment window (the only device-resident optimizer
+        # state); chunk_window_shardings shards the 1-D chunks over model
+        per_dev_bytes += (meta["stream_window_bytes"]
+                          // max(model_size, 1))
     cell.update(
         status="ok", meta=meta, compile_s=round(time.time() - t0, 1),
         n_chips=n_chips,
@@ -522,7 +560,8 @@ def main():
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--strategy", default="hift",
-                    choices=["hift", "fpft", "lomo", "adalomo"],
+                    choices=["hift", "fpft", "fpft_streamed", "lomo",
+                             "adalomo"],
                     help="which train step to lower for train cells")
     ap.add_argument("--fused-update", action="store_true",
                     help="lower the optimizer update through the fused "
@@ -537,6 +576,10 @@ def main():
                     help=">=2 lowers the fpft cell with the int8 EF "
                          "cross-pod reduce and prices the stacked fp32 "
                          "residual tree (ef_residual_bytes in the cell)")
+    ap.add_argument("--stream-window", type=int, default=1 << 20,
+                    help="fpft_streamed chunk size in bytes; the priced "
+                         "device window is max(pipeline-depth, 2) chunks of "
+                         "fp32 m+v moment slices")
     ap.add_argument("--fpft", action="store_true",
                     help="deprecated alias for --strategy fpft")
     args = ap.parse_args()
@@ -558,7 +601,8 @@ def main():
     results = [run_cell(a, s, multi_pod=mp, strategy=strategy,
                         fused_update=args.fused_update,
                         pipeline_depth=args.pipeline_depth, paged=args.paged,
-                        crosspod_pods=args.crosspod_pods)
+                        crosspod_pods=args.crosspod_pods,
+                        stream_window=args.stream_window)
                for a, s, mp in cells]
     n_ok = sum(r["status"] == "ok" for r in results)
     n_skip = sum(r["status"] == "skipped" for r in results)

@@ -4,7 +4,8 @@
         --steps 20 --strategy hift --m 2 --order bottom2up --optimizer adamw
 
 Selects any assigned architecture (--arch) and any registered fine-tuning
-strategy (--strategy hift|fpft|mezo|lisa|lomo|adalomo|..., resolved via
+strategy (--strategy hift|fpft|fpft_streamed|mezo|lisa|lomo|adalomo|...,
+resolved via
 ``repro.core.registry``), wires the deterministic data pipeline,
 checkpointing and the straggler watchdog.  On a real TPU cluster this same
 entry point runs per-host under the (data, model) mesh; ``--mesh DxM``
@@ -65,9 +66,14 @@ def main(argv=None):
                     action="store_false",
                     help="force the unfused elementwise update")
     ap.add_argument("--pipeline-depth", type=int, default=None,
-                    help=">=2 double-buffers hift/lisa optimizer-bundle "
-                         "host<->device transfers (core.pipeline); "
-                         "hift_pipelined defaults to 2")
+                    help=">=2 pipelines hift/lisa optimizer-bundle "
+                         "host<->device transfers with depth-1 lookahead "
+                         "(core.pipeline); hift_pipelined defaults to 2; "
+                         "for fpft_streamed it sets the chunk window depth")
+    ap.add_argument("--stream-window", type=int, default=None,
+                    help="fpft_streamed chunk size in bytes "
+                         "(StreamConfig.chunk_bytes); the device-resident "
+                         "optimizer window is pipeline-depth chunks")
     ap.add_argument("--mesh", default=None,
                     help="device mesh for sharded steps: DxM (data x model, "
                          "e.g. 2x4) or name=size pairs (data=2,model=4); "
@@ -132,6 +138,8 @@ def main(argv=None):
     kw = {"schedule": sched, "policy": get_policy(args.policy), "mesh": mesh,
           "fused_update": args.fused_update,
           "pipeline_depth": args.pipeline_depth}
+    if args.stream_window is not None:
+        kw["stream_window"] = args.stream_window
     if args.crosspod_pods and args.crosspod_pods >= 2:
         from repro.core import CrossPodConfig
         kw["cross_pod"] = CrossPodConfig(pods=args.crosspod_pods,

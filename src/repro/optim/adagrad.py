@@ -44,4 +44,5 @@ def adagrad(eps: float = 1e-10, weight_decay: float = 0.0,
                 {"accum": treedef.unflatten([o[1] for o in out]),
                  "count": state["count"] + 1})
 
-    return Optimizer("adagrad", init, update, state_bytes_per_param=4.0)
+    return Optimizer("adagrad", init, update, state_bytes_per_param=4.0,
+                     stream_safe=not grad_clip and not use_pallas_fused)

@@ -59,4 +59,7 @@ def adamw(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
         new_v = treedef.unflatten([o[2] for o in out])
         return new_params, {"m": new_m, "v": new_v, "count": count}
 
-    return Optimizer("adamw", init, update, state_bytes_per_param=8.0)
+    # elementwise whenever the global-norm clip (which couples every leaf)
+    # is off — the contract the chunk-streamed fpft_streamed strategy needs
+    return Optimizer("adamw", init, update, state_bytes_per_param=8.0,
+                     stream_safe=not grad_clip and not use_pallas_fused)

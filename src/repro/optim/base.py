@@ -26,6 +26,14 @@ class Optimizer(NamedTuple):
     # bytes of optimizer state per fp32 parameter (for the analytical memory
     # model of paper Appendix B; adafactor is sub-linear and reports ~0).
     state_bytes_per_param: float = 0.0
+    # True when update() is elementwise over (param, grad, state) chunks with
+    # no cross-leaf coupling — the contract the chunk-streamed strategies
+    # (``fpft_streamed``) rely on to apply the update one ChunkStream window
+    # at a time and still be bit-identical to the resident update.  A global
+    # grad clip couples every leaf through one norm, so factories only set
+    # this when ``grad_clip`` is off; adafactor's factored second moments are
+    # shape-coupled and stay False.
+    stream_safe: bool = False
 
 
 def _tmap(f, *trees):

@@ -24,7 +24,8 @@ def sgd(weight_decay: float = 0.0, grad_clip: float = 0.0) -> Optimizer:
         new_params = jax.tree.map(upd, params, grads)
         return new_params, {"count": state["count"] + 1}
 
-    return Optimizer("sgd", init, update, state_bytes_per_param=0.0)
+    return Optimizer("sgd", init, update, state_bytes_per_param=0.0,
+                     stream_safe=not grad_clip)
 
 
 def sgdm(momentum: float = 0.9, weight_decay: float = 0.0,
@@ -64,4 +65,5 @@ def sgdm(momentum: float = 0.9, weight_decay: float = 0.0,
                 {"mu": treedef.unflatten([o[1] for o in out]),
                  "count": state["count"] + 1})
 
-    return Optimizer("sgdm", init, update, state_bytes_per_param=4.0)
+    return Optimizer("sgdm", init, update, state_bytes_per_param=4.0,
+                     stream_safe=not grad_clip and not use_pallas_fused)

@@ -8,6 +8,16 @@ import pytest
 jax.config.update("jax_enable_x64", False)
 
 
+def pytest_configure(config):
+    # the subprocess-spawning test files carry pytest-timeout marks; when
+    # the plugin is absent (local dev runs) the registered marker is inert
+    # instead of warning/erroring under --strict-markers
+    config.addinivalue_line(
+        "markers",
+        "timeout(seconds): per-test timeout, enforced by pytest-timeout "
+        "when installed (CI installs it; see .github/workflows/ci.yml)")
+
+
 @pytest.fixture(scope="session")
 def key():
     return jax.random.PRNGKey(0)

@@ -1,0 +1,125 @@
+"""Property tests for the chunk-stream invariants fpft_streamed silently
+relies on (``core.pipeline.ChunkLayout`` / ``ChunkStream``): over
+seeded-random trees — arbitrary leaf shapes (including scalars), mixed
+dtypes, random chunk sizes and window depths —
+
+  - the chunk layout PARTITIONS the tree's bytes: every element of every
+    leaf is owned by exactly one ``(leaf, start, n)`` piece, pieces never
+    mix dtypes, and no chunk exceeds its byte budget (when the budget fits
+    at least one element);
+  - ``combine(extract(tree, i) for i)`` is BIT-equal to ``tree``, for the
+    layout's base tree and for any congruent tree (the property that makes
+    the per-chunk optimizer update bit-identical to the resident one);
+  - a full ``ChunkStream`` sweep never holds more than ``depth`` chunks
+    device-resident and reassembles every streamed tree bit-equal.
+
+``tests/test_grouping_properties.py`` drives the group-granular layout the
+same way; ``tests/test_stream_fpft.py`` holds the end-to-end and error-path
+coverage (no hypothesis dependency there).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.pipeline import ChunkLayout, ChunkStream
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+_DTYPES = ["float32", "bfloat16", "float16", "int8"]
+
+# a tree spec is a list of (shape, dtype) leaves; shapes up to rank 3,
+# scalars included
+_LEAF = st.tuples(st.lists(st.integers(1, 5), min_size=0, max_size=3),
+                  st.sampled_from(_DTYPES))
+_TREE = st.lists(_LEAF, min_size=1, max_size=6)
+
+
+def _build(spec, seed, offset=0.0):
+    """Tree with every element DISTINCT (a chunk landing in the wrong slot
+    cannot reassemble bit-equal by accident).  ``offset`` derives a second,
+    layout-congruent tree with different values."""
+    tree = {}
+    pos = 0
+    for i, (shape, dt) in enumerate(spec):
+        n = int(np.prod(shape)) if shape else 1
+        if dt == "int8":
+            vals = (np.arange(pos, pos + n) + int(offset)) % 127
+        else:
+            # bf16/fp16-exact and distinct within a leaf
+            vals = np.arange(n) + (1.0 if offset else 0.5)
+        tree[f"leaf{i}_{dt}"] = jnp.asarray(
+            vals.reshape(tuple(shape)), dtype=dt)
+        pos += n
+    return tree
+
+
+def _assert_trees_bitequal(a, b, err=""):
+    fa, fb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(fa) == len(fb)
+    for x, y in zip(fa, fb):
+        assert x.dtype == y.dtype, err
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=err)
+
+
+@given(spec=_TREE, chunk_bytes=st.integers(4, 257),
+       seed=st.integers(0, 10**6))
+def test_chunks_partition_bytes_exactly_once(spec, chunk_bytes, seed):
+    tree = _build(spec, seed)
+    layout = ChunkLayout.build(tree, chunk_bytes)
+    flat = jax.tree.leaves(tree)
+    covered = [np.zeros(int(l.size), dtype=np.int32) for l in flat]
+    for pieces in layout.chunks:
+        dtypes = {flat[li].dtype for li, _, _ in pieces}
+        assert len(dtypes) == 1, "a chunk mixes dtype buckets"
+        itemsize = dtypes.pop().itemsize
+        n_elems = sum(n for _, _, n in pieces)
+        if chunk_bytes >= itemsize:     # budget fits >= 1 element
+            assert n_elems * itemsize <= chunk_bytes
+        for li, start, n in pieces:
+            assert n >= 1
+            covered[li][start:start + n] += 1
+    for li, c in enumerate(covered):
+        assert (c == 1).all(), f"leaf {li}: elements not covered exactly once"
+
+
+@given(spec=_TREE, chunk_bytes=st.integers(4, 257),
+       seed=st.integers(0, 10**6))
+def test_extract_combine_roundtrip_bit_equal(spec, chunk_bytes, seed):
+    tree = _build(spec, seed)
+    layout = ChunkLayout.build(tree, chunk_bytes)
+    back = layout.combine([layout.extract(tree, i)
+                           for i in range(layout.num_chunks)])
+    _assert_trees_bitequal(tree, back, err="base tree roundtrip")
+    # the SAME layout reassembles any congruent tree (what lets one layout
+    # built from params drive grads and both AdamW moments)
+    other = _build(spec, seed, offset=3.0)
+    back2 = layout.combine([layout.extract(other, i)
+                            for i in range(layout.num_chunks)])
+    _assert_trees_bitequal(other, back2, err="congruent tree roundtrip")
+
+
+@given(spec=_TREE, chunk_bytes=st.integers(4, 129),
+       depth=st.integers(2, 5), seed=st.integers(0, 10**6))
+def test_stream_residency_bounded_and_lossless(spec, chunk_bytes, depth, seed):
+    tree = _build(spec, seed)
+    other = _build(spec, seed, offset=3.0)
+    layout = ChunkLayout.build(tree, chunk_bytes)
+    stream = ChunkStream(layout, depth=depth)
+    stream.begin(tree, other)
+    for i in range(layout.num_chunks):
+        a, b = stream.fetch(i)
+        stream.offload(i, (a, b))       # identity update
+    out_a, out_b = stream.end()
+    _assert_trees_bitequal(tree, out_a, err="streamed tree A")
+    _assert_trees_bitequal(other, out_b, err="streamed tree B")
+    stats = stream.stats
+    assert stats.max_resident <= depth, \
+        f"window exceeded: {stats.max_resident} > depth {depth}"
+    assert stats.prefetch_misses == 0   # the front-to-back walk always hits
+    assert stats.offloads == layout.num_chunks

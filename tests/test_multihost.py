@@ -29,6 +29,11 @@ from conftest import make_batch as _conftest_batch  # noqa: F401 (path check)
 from repro.core import CrossPodConfig, HiFTConfig, LRSchedule, make_runner
 from repro.models import transformer as T
 
+# coordinated-subprocess harness: a wedged worker must fail the
+# file, not hang the suite (pytest-timeout enforces this on CI;
+# the marker is registered inert in conftest.py when absent)
+pytestmark = pytest.mark.timeout(600)
+
 _REPO = Path(__file__).resolve().parent.parent
 _NPROC = 2
 _LOCAL_DEVICES = 2

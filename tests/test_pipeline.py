@@ -175,11 +175,25 @@ def test_registry_entry_and_knob_threading():
     r3 = _runner("hift", cfg)
     assert r3.strategy._pipeline is None
     assert r3.strategy.memory_mode == "hift"
-    with pytest.raises(ValueError, match="grouped"):
+    with pytest.raises(ValueError, match="pipeline_depth"):
         _runner("mezo", cfg, pipeline_depth=2)
     with pytest.raises(ValueError, match="fused"):
         _runner("hift", cfg, optimizer="adafactor", fused_update=True)
-    # depth > 2 would exceed what memory_model/dryrun account — rejected
-    # at the strategy surface until the deeper-lookahead follow-up lands
-    with pytest.raises(ValueError, match="pipeline_depth"):
-        _runner("hift", cfg, pipeline_depth=3)
+
+
+def test_depth_three_lookahead_bitwise_equal():
+    """depth > 2 chunk-granular lookahead: the prefetch window walks depth-1
+    groups ahead of the active step, stays within its in-flight budget, and
+    the trajectory is still bit-identical to the serial schedule."""
+    cfg = tiny_dense_cfg(ce_chunk=0)
+    serial = _runner("hift", cfg)
+    deep = _runner("hift", cfg, pipeline_depth=3)
+    assert deep.strategy._pipeline.depth == 3
+    for step in range(2 * serial.k + 1):
+        batch = make_batch(cfg, batch=2, seq=16, seed=step)
+        assert float(serial.train_step(batch)) == \
+            float(deep.train_step(batch)), step
+    _assert_same(_snap(serial.state), _snap(deep.state), err="depth3: ")
+    stats = deep.strategy._pipeline.stats
+    assert stats.prefetch_hits >= serial.k   # lookahead actually served
+    assert stats.max_resident <= 3           # never beyond the window

@@ -108,7 +108,10 @@ def test_compressed_reduce_lockstep(strategy, tmp_path):
     from repro.core import CrossPodConfig
 
     if not registry.get_strategy_cls(strategy).supports_cross_pod:
-        pytest.skip(f"{strategy} does not declare supports_cross_pod")
+        # "unsupported:" prefix is machine-read by tools/strategy_matrix.py
+        # to render an explicit unsupported cell instead of a bare skip
+        pytest.skip(f"unsupported: {strategy} does not declare "
+                    "supports_cross_pod")
     cfg = tiny_dense_cfg(ce_chunk=0)
     cp = CrossPodConfig(pods=2, compress=True)
     batch = make_batch(cfg, batch=2, seq=16)

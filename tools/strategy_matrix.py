@@ -24,8 +24,8 @@ from pathlib import Path
 
 # keep in sync with repro.core.registry's built-ins; importable fallback
 # below refreshes it when run with PYTHONPATH=src
-STRATEGIES = ["hift", "hift_pipelined", "fpft", "mezo", "lisa", "lomo",
-              "adalomo"]
+STRATEGIES = ["hift", "hift_pipelined", "fpft", "fpft_streamed", "mezo",
+              "lisa", "lomo", "adalomo"]
 try:
     from repro.core.registry import strategy_ids
     STRATEGIES = strategy_ids()
@@ -65,13 +65,20 @@ def outcome_of(testcase) -> str:
         if tag in ("failure", "error"):
             return "fail"
         if tag == "skipped":
+            # by-declaration skips announce themselves ("unsupported: ...",
+            # see tests/test_strategy_conformance.py) so the matrix renders
+            # them as an explicit contract hole, not an environment skip
+            msg = (child.get("message") or "").lower()
+            if msg.removeprefix("skipped:").lstrip().startswith("unsupported"):
+                return "unsupported"
             return "skip"
     return "pass"
 
 
 def build_matrix(junit_path: Path) -> tuple[dict, int]:
-    counts = {s: {"pass": 0, "fail": 0, "skip": 0} for s in STRATEGIES}
-    other = {"pass": 0, "fail": 0, "skip": 0}
+    counts = {s: {"pass": 0, "fail": 0, "skip": 0, "unsupported": 0}
+              for s in STRATEGIES}
+    other = {"pass": 0, "fail": 0, "skip": 0, "unsupported": 0}
     n_failed_attributed = 0
     for case in ET.parse(junit_path).getroot().iter("testcase"):
         out = outcome_of(case)
@@ -88,11 +95,12 @@ def build_matrix(junit_path: Path) -> tuple[dict, int]:
 
 
 def render(counts: dict) -> str:
-    lines = ["| strategy | pass | fail | skip |",
-             "|---|---:|---:|---:|"]
+    lines = ["| strategy | pass | fail | skip | unsupported |",
+             "|---|---:|---:|---:|---:|"]
     for s, c in counts.items():
         mark = " ❌" if c["fail"] else ""
-        lines.append(f"| `{s}`{mark} | {c['pass']} | {c['fail']} | {c['skip']} |")
+        lines.append(f"| `{s}`{mark} | {c['pass']} | {c['fail']} "
+                     f"| {c['skip']} | {c['unsupported']} |")
     return "\n".join(lines) + "\n"
 
 
