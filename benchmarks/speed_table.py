@@ -15,6 +15,12 @@ adds on top of the paper (see docs/performance.md):
     (``--fused-update``) — one launch per dtype bucket instead of one
     elementwise chain per leaf.
 
+``--scale`` adds the quantized-residency rows (docs/quantization.md): the
+same HiFT sweep with ``QuantConfig(frozen=int8|nf4, moments=bf16)``, priced
+from the REAL arrays after a full sweep — resident codec bytes vs the plain
+fp32 tree, bf16 vs fp32 moment bytes — with the targeted wire-byte
+reduction (>= 2x) emitted next to the measured step time.
+
 Alongside the printed table the same numbers are emitted machine-readable
 to ``BENCH_speed.json`` (override with ``--out``), one row per
 (strategy, optimizer, pipelined, fused, mesh) cell — the bench trajectory
@@ -111,6 +117,71 @@ def _duel(runner_a, runner_b, batch, n=10, reps=6):
     return ta, tb
 
 
+def _tree_bytes(tree):
+    return sum(int(l.size) * l.dtype.itemsize for l in jax.tree.leaves(tree))
+
+
+def _quant_scale_rows(cfg, params, batch, sched, rows, csv, reps):
+    """``--scale``: quantized-residency wire rows (docs/quantization.md).
+
+    Each row runs a full hift sweep so every group's optimizer bundle
+    exists, then prices the bytes the codec governs from the REAL arrays —
+    the resident tree (codec records vs plain fp32 leaves) and the moment
+    trees that ride the host<->device bundle wire every sweep (bf16 vs
+    fp32).  The fp32 master each quantized bundle carries is reported but
+    excluded from the reduction: that is the master-in-bundle invariant,
+    the bytes quantization deliberately never touches.  Returns the
+    smallest targeted reduction across formats (the >= 2x claim).
+    """
+    from repro.core import QuantConfig
+
+    def sweep_bytes(runner):
+        st = runner.state
+        resident = _tree_bytes(st.params)
+        moments = sum(_tree_bytes(b["opt"]) for b in st.opt_state.values())
+        master = sum(_tree_bytes(b.get("master", ()))
+                     for b in st.opt_state.values())
+        return resident, moments, master
+
+    plain = make_runner(cfg, "hift", params=params, optimizer="adamw",
+                        schedule=sched, hift=HiFTConfig(m=1))
+    tp = _time_steps(plain, batch, n=5, reps=min(reps, 2))
+    p_res, p_mom, _ = sweep_bytes(plain)
+    worst = float("inf")
+    for fmt in ("int8", "nf4"):
+        r = make_runner(cfg, "hift", params=params, optimizer="adamw",
+                        schedule=sched, hift=HiFTConfig(m=1),
+                        quant=QuantConfig(frozen=fmt, moments="bf16"))
+        t = _time_steps(r, batch, n=5, reps=min(reps, 2))
+        q_res, q_mom, q_mas = sweep_bytes(r)
+        red = (p_res + p_mom) / (q_res + q_mom)
+        worst = min(worst, red)
+        rows.append({
+            "strategy": "hift", "optimizer": "adamw", "pipelined": False,
+            "fused": False, "mesh": None,
+            "quant": {"frozen": fmt, "moments": "bf16",
+                      "resident_bytes": q_res,
+                      "moment_bytes_per_sweep": q_mom,
+                      "master_bytes_per_sweep": q_mas,
+                      "plain_resident_bytes": p_res,
+                      "plain_moment_bytes_per_sweep": p_mom,
+                      "resident_reduction": round(p_res / q_res, 2),
+                      "moment_reduction": round(p_mom / q_mom, 2),
+                      "targeted_wire_reduction": round(red, 2)},
+            "step_ms": round(t * 1e3, 3),
+            "steps_per_s": round(1 / t, 2),
+            "plain_step_ms": round(tp * 1e3, 3),
+        })
+        if csv:
+            print(f"speed_table/hift-quant.{fmt}/adamw,{t*1e6:.0f},"
+                  f"wire_reduction={red:.2f}x;resident={p_res/q_res:.2f}x;"
+                  f"moments={p_mom/q_mom:.2f}x;overhead={t/tp:.2f}x")
+    if csv:
+        print(f"speed_table/#quant-wire-reduction-ge-2x/adamw,"
+              f"min={worst:.2f}x,ok={worst >= 2.0}")
+    return worst
+
+
 def _bench_mesh():
     """Largest (data=2, model=n/2) mesh the visible devices allow, or None
     on a single-device host."""
@@ -120,7 +191,7 @@ def _bench_mesh():
     return mesh_from_spec(f"2x{n // 2}" if n >= 4 else "2x1")
 
 
-def run(csv=True, quick=False, out=None, reps=3, tier=None):
+def run(csv=True, quick=False, out=None, reps=3, tier=None, scale=False):
     """``out=None`` (the default for library callers like benchmarks/run.py)
     prints the table only; pass a path — the CLI passes ``DEFAULT_OUT`` — to
     also emit the machine-readable JSON and run the headline duel.
@@ -230,6 +301,11 @@ def run(csv=True, quick=False, out=None, reps=3, tier=None):
             print(f"speed_table/fpft-crosspod.{label}/sgd,{t*1e6:.0f},"
                   f"wire_bytes={wire}")
 
+    quant_worst = None
+    if scale:
+        quant_worst = _quant_scale_rows(cfg, params, batch, sched, rows,
+                                        csv, reps)
+
     if out:
         doc = {
             "bench": "speed_table",
@@ -259,6 +335,11 @@ def run(csv=True, quick=False, out=None, reps=3, tier=None):
             "hift_adamw_pipelined_fused_ms": round(t_piped * 1e3, 3),
             "pipelined_fused_le_serial_unfused": t_piped <= t_serial,
         }
+        if quant_worst is not None:
+            doc["claims"]["quant_targeted_wire_reduction_min"] = \
+                round(quant_worst, 2)
+            doc["claims"]["quant_targeted_wire_reduction_ge_2x"] = \
+                quant_worst >= 2.0
         if csv:
             print(f"speed_table/#duel-pipelined+fused-vs-serial+unfused/"
                   f"adamw,speedup={t_serial/t_piped:.3f}x")
@@ -282,8 +363,13 @@ if __name__ == "__main__":
                          "(default 3, 5 for --tier large)")
     ap.add_argument("--out", default=str(DEFAULT_OUT),
                     help="BENCH_speed.json path ('' disables)")
+    ap.add_argument("--scale", action="store_true",
+                    help="add the quantized-residency rows: hift with "
+                         "QuantConfig(frozen=int8|nf4, moments=bf16), "
+                         "real-array wire-byte reductions next to step time")
     args = ap.parse_args()
     tier = args.tier or ("quick" if args.quick else "default")
     reps = args.reps if args.reps is not None else (5 if tier == "large" else 3)
     print("name,us_per_call,derived")
-    run(quick=args.quick, out=args.out or None, reps=reps, tier=tier)
+    run(quick=args.quick, out=args.out or None, reps=reps, tier=tier,
+        scale=args.scale)

@@ -6,7 +6,7 @@ from repro.core.pipeline import (BundlePipeline, ChunkLayout, ChunkStream,
 from repro.core.strategy import (TrainState, Strategy, Runner,
                                  HiFTConfig, LiSAConfig, MeZOConfig,
                                  LOMOConfig, AdaLomoConfig, CrossPodConfig,
-                                 StreamConfig, HiFTStrategy,
+                                 StreamConfig, QuantConfig, HiFTStrategy,
                                  FPFTStrategy, LiSAStrategy, MeZOStrategy,
                                  LOMOStrategy, AdaLomoStrategy,
                                  PipelinedHiFTStrategy, StreamedFPFTStrategy,

@@ -13,11 +13,17 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, Sequence
+from typing import Any, Optional, Sequence
+
+import jax.numpy as jnp
 
 from repro.common.pytree import flatten_with_paths
 from repro.core.grouping import Group, make_groups
 from repro.models.base import Unit
+
+# optimizers whose moment trees take QuantConfig's ``moment_dtype``
+# narrowing (the same set core.registry.FUSED_OPTIMIZERS names)
+_MOMENT_OPTIMIZERS = ("adamw", "sgdm", "adagrad")
 
 PyTree = Any
 
@@ -94,15 +100,42 @@ class _Accountant:
     def total(self) -> int:
         return sum(_size(l) for l in self.flat.values())
 
+    def quant_resident_bytes(self, fmt: str, itemsize: int) -> int:
+        """Resident bytes of the whole tree codec-encoded: per-leaf
+        ``dist.quant.quant_leaf_bytes`` (codes + per-tile scales for
+        quantizable leaves; ``itemsize`` bytes/element for the scalars and
+        1-d leaves that pass through at the resident precision)."""
+        from repro.dist.quant import quant_leaf_bytes
+        total = 0
+        for l in self.flat.values():
+            floating = jnp.issubdtype(getattr(l, "dtype", jnp.float32),
+                                      jnp.floating)
+            total += quant_leaf_bytes(tuple(l.shape), itemsize, fmt,
+                                      floating=floating)
+        return total
+
 
 def analyze(shapes: PyTree, units: Sequence[Unit], *, optimizer: str = "adamw",
             precision: str = "fp32", mode: str = "hift", m: int = 1,
             ef_pods: int = 0, stream_depth: int = 2,
-            stream_chunk_bytes: int = 1 << 20) -> MemoryReport:
+            stream_chunk_bytes: int = 1 << 20,
+            frozen_quant: Optional[str] = None,
+            moment_dtype: str = "fp32") -> MemoryReport:
     """shapes: params tree or jax.eval_shape(init) tree.
     precision: fp32 | mixed | mixed_hi.
     mode: fpft | fpft_streamed | hift | hift_pipelined | mezo | lomo |
     adalomo.
+    frozen_quant: None | "int8" | "nf4" — price the RESIDENT weight tree
+    codec-encoded (``dist.quant``: codes + per-tile fp32 scales, per-leaf
+    shape math).  The active update path still needs a full-precision
+    master, so the ``master`` term (fp32, bundle-resident) is always added;
+    ``precision="mixed"`` (a resident fp32 master per param) contradicts
+    quantized residency and is rejected.  Realizable today by the grouped
+    strategies (``QuantConfig(frozen=...)``); for the fpft modes this cell
+    is the QFT-direction bound the ROADMAP names.
+    moment_dtype: "fp32" | "bf16" — resident bytes per optimizer moment
+    element (``QuantConfig(moments="bf16")`` halves AdamW's #Sta); only the
+    moment-carrying optimizers (adamw/sgdm/adagrad) accept "bf16".
     ef_pods >= 2: price the compressed cross-pod reduce's error-feedback
     residual tree — one fp32 copy of whatever gradient tree crosses the
     wire, PER POD (fpft / fpft_streamed: the full tree; hift modes: the
@@ -150,6 +183,30 @@ def analyze(shapes: PyTree, units: Sequence[Unit], *, optimizer: str = "adamw",
     hift_modes = ("hift", "hift_pipelined")
     fused_modes = ("lomo", "adalomo")
 
+    if moment_dtype in ("fp32", "float32"):
+        mbytes = 4
+    elif moment_dtype in ("bf16", "bfloat16"):
+        if optimizer not in _MOMENT_OPTIMIZERS:
+            raise ValueError(
+                "moment_dtype='bf16' applies to the moment-carrying "
+                f"optimizers {_MOMENT_OPTIMIZERS}, not {optimizer!r}")
+        mbytes = 2
+    else:
+        raise ValueError(f"moment_dtype must be fp32 or bf16, "
+                         f"got {moment_dtype!r}")
+    if frozen_quant is not None:
+        from repro.dist.quant import QUANT_FORMATS
+        if frozen_quant not in QUANT_FORMATS:
+            raise ValueError(f"frozen_quant must be one of {QUANT_FORMATS} "
+                             f"or None, got {frozen_quant!r}")
+        if precision == "mixed":
+            raise ValueError(
+                "frozen_quant with precision='mixed' contradicts itself: "
+                "mixed keeps a resident fp32 master per param; use fp32 or "
+                "mixed_hi")
+        if precision not in ("fp32", "mixed_hi"):
+            raise ValueError(precision)
+
     if mode in ("fpft", "fpft_streamed"):
         peak, gsize = n, n
     elif mode in hift_modes:
@@ -184,7 +241,13 @@ def analyze(shapes: PyTree, units: Sequence[Unit], *, optimizer: str = "adamw",
         master = peak * resident_bundles
 
     # --- weights resident (#Para) ---
-    if precision == "fp32":
+    if frozen_quant is not None:
+        # codec-encoded resident tree (codes + scales at the resident
+        # precision's passthrough itemsize) + the active fp32 master that
+        # rides the optimizer bundle (the update path never reads codes)
+        itemsize = 2 if precision == "mixed_hi" else 4
+        para = acc.quant_resident_bytes(frozen_quant, itemsize) + 4 * master
+    elif precision == "fp32":
         para = 4 * n
     elif precision == "mixed":
         para = 4 * n + 2 * n            # fp32 master + bf16 compute copy
@@ -218,14 +281,15 @@ def analyze(shapes: PyTree, units: Sequence[Unit], *, optimizer: str = "adamw",
                         for g in groups) * resident_bundles
     elif mode == "fpft_streamed":
         # host-resident moments: device cost is the bounded window — depth
-        # chunks of the base (param) layout, each dragging STATE_MULT fp32
-        # moment slices of the same element count (AdamW: m + v)
-        full = int(_STATE_MULT[optimizer] * 4 * n)
-        window = int(_STATE_MULT[optimizer] * 4 * window_elems)
+        # chunks of the base (param) layout, each dragging STATE_MULT
+        # moment slices of the same element count (AdamW: m + v) at
+        # ``moment_dtype`` bytes each
+        full = int(_STATE_MULT[optimizer] * mbytes * n)
+        window = int(_STATE_MULT[optimizer] * mbytes * window_elems)
         state = min(full, window)
     else:
-        state = int(_STATE_MULT[optimizer] * 4 * peak * resident_bundles) \
-            if mode in hift_modes else int(_STATE_MULT[optimizer] * 4 * n)
+        state = int(_STATE_MULT[optimizer] * mbytes * peak * resident_bundles) \
+            if mode in hift_modes else int(_STATE_MULT[optimizer] * mbytes * n)
 
     ef = 0
     if ef_pods and ef_pods >= 2:

@@ -96,6 +96,12 @@ def make_runner(cfg, strategy: str = "hift", *, params: Any = None,
       device window (``StreamConfig.chunk_bytes``; the ``launch.train``/
       ``launch.dryrun`` ``--stream-window`` flag lands here).  Only valid
       with ``strategy="fpft_streamed"``.
+    - ``quant``: a ``QuantConfig`` for quantized resident state (see
+      ``docs/quantization.md``).  ``frozen="int8"|"nf4"`` codec-encodes the
+      grouped strategies' resident tree; ``moments="bf16"`` rebuilds a
+      by-NAME optimizer with ``moment_dtype=bf16`` (half the optimizer
+      state bytes) — it therefore needs the optimizer given by name, and
+      one of the moment-carrying ``FUSED_OPTIMIZERS``.
 
     Remaining kwargs go to the strategy constructor (``schedule``,
     ``policy``, ``loss_fn``, ``param_sharding_fn``, and per-strategy configs
@@ -119,6 +125,7 @@ def make_runner(cfg, strategy: str = "hift", *, params: Any = None,
             kwargs.get("stream") or StreamConfig(),
             chunk_bytes=int(stream_window))
 
+    quant = kwargs.pop("quant", None)
     grouped = strategy in ("hift", "hift_pipelined", "lisa")
     if isinstance(optimizer, str):
         fused = (jax.default_backend() == "tpu" and grouped) \
@@ -129,10 +136,24 @@ def make_runner(cfg, strategy: str = "hift", *, params: Any = None,
         if fused_update and not okw:
             raise ValueError(f"no fused update kernel for {optimizer!r}; "
                              f"have {FUSED_OPTIMIZERS}")
+        if quant is not None and quant.moments:
+            if optimizer not in FUSED_OPTIMIZERS:
+                raise ValueError(
+                    "quant.moments applies to the moment-carrying "
+                    f"optimizers {FUSED_OPTIMIZERS}, not {optimizer!r} "
+                    "(sgd keeps no moments; adafactor's factored stats "
+                    "are already sub-fp32-sized)")
+            okw["moment_dtype"] = "bfloat16"
         optimizer = make_optimizer(optimizer, **okw)
     elif fused_update:
         raise ValueError("fused_update=True needs the optimizer given by "
                          "name so make_runner can rebuild it fused")
+    elif quant is not None and quant.moments:
+        raise ValueError("quant.moments needs the optimizer given by name "
+                         "so make_runner can rebuild it with "
+                         "moment_dtype=bf16")
+    if quant is not None:
+        kwargs["quant"] = quant
     if pipeline_depth is not None:
         if strategy == "hift_pipelined" and pipeline_depth < 2:
             raise ValueError(

@@ -217,6 +217,50 @@ class StreamConfig:
                 "(resident) path is plain 'fpft'")
 
 
+@dataclasses.dataclass
+class QuantConfig:
+    """Quantized resident state (see ``docs/quantization.md``).
+
+    ``frozen``: blockwise codec for the grouped strategies' resident param
+    tree — ``"int8"`` (~4x smaller than fp32) or ``"nf4"`` (~8x), both from
+    ``repro.dist.quant`` (per-(8,128)-tile scales).  The resident tree stays
+    ENCODED between steps; the jitted step dequantizes the frozen majority
+    on the fly (2-d leaves can route through the fused dequant-matmul
+    kernel) and re-quantizes the active group after its update.  The active
+    group's fp32 master rides its optimizer bundle across revisits, so
+    quantization error never accumulates into the update path — it is a
+    one-way rounding of the FROZEN view only.
+
+    ``moments``: resident dtype of the optimizer moments — ``"bf16"``
+    halves AdamW's state bytes (and the streamed/offloaded strategies' wire
+    bytes); every update still computes in fp32 and re-rounds on store
+    (``repro.optim``'s ``moment_dtype``).  Wired by ``make_runner`` when
+    the optimizer is given by NAME (the factory rebuilds it)."""
+    frozen: Optional[str] = None
+    moments: Optional[str] = None
+
+    def __post_init__(self):
+        from repro.dist.quant import QUANT_FORMATS
+        if self.frozen is not None and self.frozen not in QUANT_FORMATS:
+            raise ValueError(
+                f"QuantConfig.frozen must be one of {QUANT_FORMATS} or "
+                f"None, got {self.frozen!r}")
+        if self.moments is not None and self.moments not in ("bf16",
+                                                             "bfloat16"):
+            raise ValueError(
+                "QuantConfig.moments supports 'bf16' (fp32 is the default "
+                f"resident moment dtype), got {self.moments!r}")
+        if self.frozen is None and self.moments is None:
+            raise ValueError(
+                "empty QuantConfig: set frozen='int8'|'nf4' and/or "
+                "moments='bf16'")
+
+    @property
+    def moment_dtype(self):
+        """The jnp dtype ``moments`` resolves to (None = fp32 default)."""
+        return jnp.bfloat16 if self.moments else None
+
+
 def crosspod_reduce(loss_and_grad: Callable, params: PyTree, batch,
                     residuals: PyTree, cross_pod: CrossPodConfig):
     """Cross-pod data-parallel gradient reduce with optional int8
@@ -365,12 +409,23 @@ class Strategy:
     # strategies with a whole-tree reduce point); the fused-backward and
     # zeroth-order families have no gradient tree to compress
     supports_cross_pod = False
+    # why cross_pod is unsupported — appended to the rejection error when
+    # non-empty, so strategies with a structural reason (the fused-backward
+    # family) point the user somewhere actionable
+    cross_pod_unsupported_reason = ""
+    # declarations the quantized-residency machinery keys on (see
+    # QuantConfig): frozen-tree codecs need a frozen resident tree (grouped
+    # strategies only); moment quantization needs a first-class optimizer
+    # moment tree the ``moment_dtype`` factories own
+    supports_quant_frozen = False
+    supports_quant_moments = False
 
     def __init__(self, cfg, optimizer: Optional[Optimizer], *,
                  schedule: Optional[LRSchedule] = None, policy: Policy = FP32,
                  loss_fn: Optional[Callable] = None, mesh=None,
                  param_sharding_fn: Optional[Callable] = None,
-                 cross_pod: Optional[CrossPodConfig] = None):
+                 cross_pod: Optional[CrossPodConfig] = None,
+                 quant: Optional[QuantConfig] = None):
         self.cfg = cfg
         self.model = get_family(cfg)
         self.optimizer = optimizer
@@ -380,9 +435,24 @@ class Strategy:
         self.mesh = mesh
         self.param_sharding_fn = param_sharding_fn
         if cross_pod is not None and not self.supports_cross_pod:
-            raise ValueError(
-                f"strategy {self.name!r} does not support cross_pod")
+            msg = f"strategy {self.name!r} does not support cross_pod"
+            if self.cross_pod_unsupported_reason:
+                msg = f"{msg}: {self.cross_pod_unsupported_reason}"
+            raise ValueError(msg)
         self.cross_pod = cross_pod
+        if quant is not None:
+            if quant.frozen and not self.supports_quant_frozen:
+                raise ValueError(
+                    f"strategy {self.name!r} does not support "
+                    f"quant.frozen={quant.frozen!r}: only the grouped "
+                    "strategies (hift/hift_pipelined/lisa) keep a frozen "
+                    "resident tree to encode")
+            if quant.moments and not self.supports_quant_moments:
+                raise ValueError(
+                    f"strategy {self.name!r} does not support "
+                    "quant.moments: it keeps no first-class optimizer "
+                    "moment tree (see QuantConfig)")
+        self.quant = quant
 
     # ------------------------------------------------------------ sharding
 
@@ -501,6 +571,15 @@ class _GroupedStrategy(Strategy):
     offload_optimizer = True
     memory_mode = "hift"
     supports_cross_pod = True
+    # the grouped strategies are the quantized-residency home: the resident
+    # tree is mostly frozen weights (codec-encoded between steps) and the
+    # bundles carry moment trees (bf16-able via moment_dtype)
+    supports_quant_frozen = True
+    supports_quant_moments = True
+
+    @property
+    def _quant_frozen(self) -> Optional[str]:
+        return self.quant.frozen if self.quant is not None else None
 
     def resident_param_shardings(self, tree: PyTree) -> PyTree:
         return dist_shardings.replicated(tree, self.mesh)
@@ -545,6 +624,19 @@ class _GroupedStrategy(Strategy):
             return params                         # fp32 master resident
         return tree_cast(params, policy.param_dtype)
 
+    def _resident_params(self, params: PyTree) -> PyTree:
+        """Policy-cast, (optionally) codec-encode, and place the resident
+        tree — what grouped ``init`` stores in ``TrainState.params``.  Under
+        ``QuantConfig(frozen=...)`` every quantizable leaf becomes a
+        ``{"q", "s", "t"}`` record (``repro.dist.quant``); the grouping /
+        write-back machinery slices those records on dim 0 exactly like the
+        plain leaves they encode."""
+        params = self._cast_params(params)
+        if self._quant_frozen is not None:
+            from repro.dist.quant import quantize_tree
+            params = quantize_tree(params, self._quant_frozen)
+        return self.place_params(params)
+
     def _cut(self, group: Group) -> Optional[int]:
         if not self.use_cut:
             return None
@@ -554,14 +646,25 @@ class _GroupedStrategy(Strategy):
         """Optimizer-state bundle for a group (created on first visit).
         Under a compressed cross-pod reduce the group's per-pod EF residuals
         ride in the bundle (key ``"ef"``, stacked pods-leading fp32) so host
-        offload, pipelining and checkpointing cover them for free."""
-        if self.policy.master_active_group_only:
+        offload, pipelining and checkpointing cover them for free.
+
+        Under quantized residency (``QuantConfig(frozen=...)``) the bundle
+        ALWAYS carries an fp32 master decoded from the group's first-visit
+        codec records: the master — not the re-quantized resident copy —
+        feeds every later update of this group, so codec rounding never
+        compounds across revisits."""
+        if self._quant_frozen is not None:
+            from repro.dist.quant import dequantize_tree
+            master = tree_cast(dequantize_tree(active), jnp.float32)
+            bundle = {"opt": self.optimizer.init(master), "master": master}
+        elif self.policy.master_active_group_only:
             master = tree_cast(active, jnp.float32)
             bundle = {"opt": self.optimizer.init(master), "master": master}
         else:
             bundle = {"opt": self.optimizer.init(active)}
         if self._cross_pod_on and self.cross_pod.compress:
-            bundle["ef"] = init_residuals(active, self.cross_pod.pods)
+            bundle["ef"] = init_residuals(bundle.get("master", active),
+                                          self.cross_pod.pods)
         return bundle
 
     def build_step(self, gi: int, example=None) -> tuple[Callable, Any]:
@@ -579,8 +682,19 @@ class _GroupedStrategy(Strategy):
         cfg, opt, policy = self.cfg, self.optimizer, self.policy
         loss_fn = self.loss_fn
         cp = self.cross_pod if self._cross_pod_on else None
+        qf = self._quant_frozen
 
         def step(active, frozen, bundle, batch, lr):
+            if qf is not None:
+                # decode the frozen majority in-jit (no host-resident fp32
+                # copy ever exists); the active group computes from its fp32
+                # bundle master, and only the RESIDENT view re-encodes below
+                from repro.dist.quant import dequantize_tree, quantize_tree
+                frozen = dequantize_tree(frozen)
+                work = tree_cast(bundle["master"], policy.param_dtype)
+            else:
+                work = active
+
             def loss_of(a, mb):
                 full = merge_params(a, frozen, group)
                 return loss_fn(cfg, full, mb, cut=cut,
@@ -588,12 +702,19 @@ class _GroupedStrategy(Strategy):
 
             if cp is not None:
                 grads, new_res, loss = crosspod_reduce(
-                    lambda mb: jax.value_and_grad(loss_of)(active, mb),
-                    active, batch, bundle.get("ef", {}), cp)
+                    lambda mb: jax.value_and_grad(loss_of)(work, mb),
+                    work, batch, bundle.get("ef", {}), cp)
                 ef = {"ef": new_res} if "ef" in bundle else {}
             else:
-                loss, grads = jax.value_and_grad(loss_of)(active, batch)
+                loss, grads = jax.value_and_grad(loss_of)(work, batch)
                 ef = {}
+            if qf is not None:
+                new_master, new_st = opt.update(grads, bundle["opt"],
+                                                bundle["master"], lr)
+                new_active = quantize_tree(
+                    tree_cast(new_master, policy.param_dtype), qf)
+                return new_active, {"opt": new_st, "master": new_master,
+                                    **ef}, loss
             if policy.master_active_group_only:
                 master, st = bundle["master"], bundle["opt"]
                 new_master, new_st = opt.update(grads, st, master, lr)
@@ -702,6 +823,10 @@ class _GroupedStrategy(Strategy):
         return self._write_back(gi, state.params, new_active), opt_state, loss
 
     def peak_trainable_params(self, params: PyTree) -> int:
+        if self._quant_frozen is not None:
+            from repro.dist.quant import tree_logical_size
+            return max(tree_logical_size(split_params(params, g)[0])
+                       for g in self.groups)
         return max(tree_size(split_params(params, g)[0]) for g in self.groups)
 
     def group_at(self, state: TrainState, step: Optional[int] = None) -> Group:
@@ -724,11 +849,12 @@ class HiFTStrategy(_GroupedStrategy):
                  schedule: Optional[LRSchedule] = None, policy: Policy = FP32,
                  loss_fn: Optional[Callable] = None, mesh=None,
                  param_sharding_fn: Optional[Callable] = None,
-                 cross_pod: Optional[CrossPodConfig] = None):
+                 cross_pod: Optional[CrossPodConfig] = None,
+                 quant: Optional[QuantConfig] = None):
         super().__init__(cfg, optimizer, schedule=schedule, policy=policy,
                          loss_fn=loss_fn, mesh=mesh,
                          param_sharding_fn=param_sharding_fn,
-                         cross_pod=cross_pod)
+                         cross_pod=cross_pod, quant=quant)
         self.hift = hift if hift is not None else HiFTConfig()
         self.use_cut = self.hift.use_cut
         self.offload_optimizer = self.hift.offload_optimizer
@@ -738,7 +864,7 @@ class HiFTStrategy(_GroupedStrategy):
                                   self.hift.seed)
 
     def init(self, params: PyTree, rng=None) -> TrainState:
-        return TrainState(self.place_params(self._cast_params(params)), {}, 0,
+        return TrainState(self._resident_params(params), {}, 0,
                           {"order": np.asarray(self.order, np.int64)})
 
     def _order_at(self, state: TrainState) -> list[int]:
@@ -811,11 +937,12 @@ class LiSAStrategy(_GroupedStrategy):
                  schedule: Optional[LRSchedule] = None, policy: Policy = FP32,
                  loss_fn: Optional[Callable] = None, mesh=None,
                  param_sharding_fn: Optional[Callable] = None,
-                 cross_pod: Optional[CrossPodConfig] = None):
+                 cross_pod: Optional[CrossPodConfig] = None,
+                 quant: Optional[QuantConfig] = None):
         super().__init__(cfg, optimizer, schedule=schedule, policy=policy,
                          loss_fn=loss_fn, mesh=mesh,
                          param_sharding_fn=param_sharding_fn,
-                         cross_pod=cross_pod)
+                         cross_pod=cross_pod, quant=quant)
         self.lisa = lisa if lisa is not None else LiSAConfig()
         self.use_cut = self.lisa.use_cut
         self.offload_optimizer = self.lisa.offload_optimizer
@@ -836,8 +963,7 @@ class LiSAStrategy(_GroupedStrategy):
         return self.groups[self.group_index_at(step)]
 
     def init(self, params: PyTree, rng=None) -> TrainState:
-        return TrainState(self.place_params(self._cast_params(params)), {}, 0,
-                          {})
+        return TrainState(self._resident_params(params), {}, 0, {})
 
     def step(self, state: TrainState, batch) -> tuple[TrainState, Metrics]:
         step = int(state.step)
@@ -920,15 +1046,20 @@ class FPFTStrategy(Strategy):
 
     name = "fpft"
     supports_cross_pod = True
+    # every param trains every step — no frozen tree to codec-encode — but
+    # the optimizer moment tree is first-class, so bf16 moments apply
+    # (fpft_streamed inherits: bf16 moments also halve its wire bytes)
+    supports_quant_moments = True
 
     def __init__(self, cfg, optimizer, *, schedule: Optional[LRSchedule] = None,
                  policy: Policy = FP32, loss_fn: Optional[Callable] = None,
                  mesh=None, param_sharding_fn: Optional[Callable] = None,
-                 cross_pod: Optional[CrossPodConfig] = None):
+                 cross_pod: Optional[CrossPodConfig] = None,
+                 quant: Optional[QuantConfig] = None):
         super().__init__(cfg, optimizer, schedule=schedule, policy=policy,
                          loss_fn=loss_fn, mesh=mesh,
                          param_sharding_fn=param_sharding_fn,
-                         cross_pod=cross_pod)
+                         cross_pod=cross_pod, quant=quant)
         self._step_fn: Optional[tuple[Callable, Any]] = None
 
     def init(self, params: PyTree, rng=None) -> TrainState:
@@ -1265,10 +1396,13 @@ class MeZOStrategy(Strategy):
     def __init__(self, cfg, optimizer=None, *, mezo: Optional[MeZOConfig] = None,
                  schedule: Optional[LRSchedule] = None, policy: Policy = FP32,
                  loss_fn: Optional[Callable] = None, mesh=None,
-                 param_sharding_fn: Optional[Callable] = None):
+                 param_sharding_fn: Optional[Callable] = None,
+                 quant: Optional[QuantConfig] = None):
+        # quant is forwarded so the base class rejects it with the uniform
+        # unsupported-declaration error (no frozen tree, no moment tree)
         super().__init__(cfg, optimizer, schedule=schedule, policy=policy,
                          loss_fn=loss_fn, mesh=mesh,
-                         param_sharding_fn=param_sharding_fn)
+                         param_sharding_fn=param_sharding_fn, quant=quant)
         self.mezo = mezo if mezo is not None else MeZOConfig()
         self._step_fn: Optional[tuple[Callable, Any]] = None
 
@@ -1845,6 +1979,14 @@ class _FusedBackwardStrategy(Strategy):
     ``self._body`` from the ONE pieces object ``_setup_fused`` resolved."""
 
     _donate: tuple = (0,)
+    # part of the API: tests/test_stream_fpft.py pins the full rejection
+    # message and docs/sharding.md cites it
+    cross_pod_unsupported_reason = (
+        "the fused backward consumes each piece's gradient inside the "
+        "reverse scan, so no whole-gradient tree ever exists for the "
+        "cross-pod reduce to compress (a per-piece reduce hook is a "
+        "ROADMAP item); use fpft/fpft_streamed — or the grouped "
+        "hift/lisa — for compressed cross-pod data parallelism")
 
     def _setup_fused(self, loss_fn) -> None:
         """Resolve the family's raw ``lomo_pieces`` exactly once; the same
@@ -1958,14 +2100,16 @@ class LOMOStrategy(_FusedBackwardStrategy):
                  loss_fn: Optional[Callable] = None, mesh=None,
                  param_sharding_fn: Optional[Callable] = None,
                  cross_pod: Optional[CrossPodConfig] = None,
-                 stream: Optional[StreamConfig] = None):
-        # cross_pod is forwarded so the base class rejects it with the
-        # uniform unsupported-declaration error (the fused backward has no
-        # whole-gradient-tree reduce point to compress)
+                 stream: Optional[StreamConfig] = None,
+                 quant: Optional[QuantConfig] = None):
+        # cross_pod / quant are forwarded so the base class rejects them
+        # with the uniform unsupported-declaration errors (the fused
+        # backward has no whole-gradient-tree reduce point to compress, no
+        # frozen tree to encode and no moment tree to narrow)
         super().__init__(cfg, optimizer, schedule=schedule, policy=policy,
                          loss_fn=loss_fn, mesh=mesh,
                          param_sharding_fn=param_sharding_fn,
-                         cross_pod=cross_pod)
+                         cross_pod=cross_pod, quant=quant)
         self.lomo = lomo if lomo is not None else LOMOConfig()
         self._setup_fused(loss_fn)
         self._setup_stream(stream)
@@ -2032,13 +2176,14 @@ class AdaLomoStrategy(_FusedBackwardStrategy):
                  loss_fn: Optional[Callable] = None, mesh=None,
                  param_sharding_fn: Optional[Callable] = None,
                  cross_pod: Optional[CrossPodConfig] = None,
-                 stream: Optional[StreamConfig] = None):
-        # cross_pod is forwarded so the base class rejects it with the
-        # uniform unsupported-declaration error (as LOMO)
+                 stream: Optional[StreamConfig] = None,
+                 quant: Optional[QuantConfig] = None):
+        # cross_pod / quant are forwarded so the base class rejects them
+        # with the uniform unsupported-declaration errors (as LOMO)
         super().__init__(cfg, optimizer, schedule=schedule, policy=policy,
                          loss_fn=loss_fn, mesh=mesh,
                          param_sharding_fn=param_sharding_fn,
-                         cross_pod=cross_pod)
+                         cross_pod=cross_pod, quant=quant)
         self.adalomo = adalomo if adalomo is not None else AdaLomoConfig()
         self._setup_fused(loss_fn)
         self._setup_stream(stream)

@@ -1,0 +1,252 @@
+"""Blockwise int8 / NF4 codecs for resident parameter trees.
+
+The frozen replicated tree is HiFT's remaining dominant resident cost:
+gradients and optimizer state already shrink with the group schedule, so
+the frozen weights are what the memory model prices highest.  QFT-style
+quantized residency cuts that 4x (int8) or ~8x (NF4) — the frozen tree
+lives as codes + per-tile scales and is dequantized on use (in-jit, or
+fused into the consuming kernel; see ``kernels/fused_dequant_matmul``).
+
+Unlike ``dist/compress.py`` (per-tensor scales, error feedback for a
+*stream* of gradients), resident weights are quantized ONCE and read many
+times, so accuracy comes from *blockwise* scales:
+
+- ndim >= 3 leaves (stacked ``(L, r, c)`` weights): one fp32 scale per
+  (8, 128) tile of the trailing two dims — the packed tile shape the
+  Pallas substrate already streams.
+- ndim == 2 leaves: one scale per (1, 128) row-block.  Rows are the
+  stacked-unit axis for ``(L, d)`` bias/norm stacks, and per-row scale
+  grids keep every quantized sub-array sliceable along dim 0 with the
+  same indices as the original leaf — ``split_params``/``write_back``
+  work on quantized trees unchanged.
+
+A quantized leaf is the dict ``{"q": codes, "s": scales, "t": template}``:
+
+- ``q`` — int8 codes (leaf shape) or NF4 codes packed 2-per-uint8 along
+  the last dim (``shape[:-1] + (ceil(c/2),)``).  ``q.dtype`` encodes the
+  format: ``int8`` -> int8, ``uint8`` -> nf4.
+- ``s`` — fp32 per-tile scales on the grid above.
+- ``t`` — a zero-size ``(shape[0], 0, shape[-1])`` template carrying the
+  original dtype and true last-dim size (NF4 padding is not recoverable
+  from ``q`` alone).  Zero-size arrays are free, checkpoint fine, and
+  keep a real dim 0 so group slicing stays legal.
+
+Only floating leaves with ndim >= 2 quantize; everything else (scalars,
+1-d norm vectors, integer leaves) passes through untouched — blockwise
+scales need a lane axis, and 1-d leaves are a rounding error of the
+total bytes anyway.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+QUANT_FORMATS = ("int8", "nf4")
+
+# QLoRA's NF4 codebook: the 16 quantiles of a standard normal, normalized
+# to [-1, 1].  Exact float32 values — codebook exactness is test-pinned.
+NF4_CODEBOOK = (
+    -1.0, -0.6961928009986877, -0.5250730514526367, -0.39491748809814453,
+    -0.28444138169288635, -0.18477343022823334, -0.09105003625154495, 0.0,
+    0.07958029955625534, 0.16093020141124725, 0.24611230194568634,
+    0.3344709873199463, 0.42563003301620483, 0.5626170039176941,
+    0.7229568362236023, 1.0,
+)
+# decision boundaries: midpoint between adjacent codebook entries
+_NF4_MIDPOINTS = tuple(
+    (NF4_CODEBOOK[i] + NF4_CODEBOOK[i + 1]) / 2 for i in range(15))
+
+_LANE = 128        # lane tile (last dim)
+_SUBLANE = 8       # sublane tile (second-to-last dim) for ndim >= 3
+_TINY = 1e-30      # scale floor: all-zero tiles must not divide by zero
+
+
+def _tile_rows(ndim: int) -> int:
+    """Sublane tile extent: 8 for ndim>=3, 1 for ndim==2 (keeps the scale
+    grid congruent with dim-0 slicing of stacked ``(L, d)`` leaves)."""
+    return _SUBLANE if ndim >= 3 else 1
+
+
+def quantizable(x) -> bool:
+    """True if the codec applies to this leaf (floating, ndim >= 2)."""
+    return x.ndim >= 2 and jnp.issubdtype(x.dtype, jnp.floating)
+
+
+def is_quantized(leaf) -> bool:
+    """True for a ``{"q", "s", "t"}`` codec dict (the tree ``is_leaf``)."""
+    return isinstance(leaf, dict) and set(leaf.keys()) == {"q", "s", "t"}
+
+
+def quant_format(leaf) -> str:
+    """Format of a quantized leaf, recovered from the code dtype."""
+    return "int8" if leaf["q"].dtype == jnp.int8 else "nf4"
+
+
+def quant_shape(leaf) -> tuple[int, ...]:
+    """Original (dequantized) shape of a quantized leaf."""
+    q, t = leaf["q"], leaf["t"]
+    if q.dtype == jnp.int8:
+        return tuple(q.shape)
+    return tuple(q.shape[:-1]) + (t.shape[-1],)
+
+
+def _tile_absmax(x32: jnp.ndarray, tile_r: int) -> jnp.ndarray:
+    """Per-tile absolute max over (tile_r, 128) tiles of the last 2 dims."""
+    *lead, r, c = x32.shape
+    rp, cp = -r % tile_r, -c % _LANE
+    xp = jnp.pad(x32, [(0, 0)] * len(lead) + [(0, rp), (0, cp)])
+    grid = xp.reshape(*lead, (r + rp) // tile_r, tile_r,
+                      (c + cp) // _LANE, _LANE)
+    return jnp.max(jnp.abs(grid), axis=(-3, -1))
+
+
+def expand_scales(s: jnp.ndarray, shape: tuple[int, ...],
+                  tile_r: int) -> jnp.ndarray:
+    """Broadcast a per-tile scale grid back over ``shape`` (crop-exact)."""
+    r, c = shape[-2], shape[-1]
+    lead = s.shape[:-2]
+    e = jnp.broadcast_to(s[..., :, None, :, None],
+                         lead + (s.shape[-2], tile_r, s.shape[-1], _LANE))
+    e = e.reshape(lead + (s.shape[-2] * tile_r, s.shape[-1] * _LANE))
+    return e[..., :r, :c]
+
+
+def _template(x) -> jnp.ndarray:
+    """Zero-size dtype/shape carrier: real dim 0 (group-sliceable), zero
+    middle dim, real last dim (NF4 unpadding needs the true width)."""
+    return jnp.zeros((x.shape[0], 0, x.shape[-1]), x.dtype)
+
+
+def _nf4_encode(y: jnp.ndarray) -> jnp.ndarray:
+    """Nearest-codebook index for normalized values in [-1, 1]: counting
+    midpoints below y lands exactly on the nearest entry (15 compares,
+    no gather — the same shape the Pallas decode uses in reverse)."""
+    idx = jnp.zeros(y.shape, jnp.uint8)
+    for m in _NF4_MIDPOINTS:
+        idx = idx + (y >= m).astype(jnp.uint8)
+    return idx
+
+
+def nf4_decode(idx: jnp.ndarray) -> jnp.ndarray:
+    """Codebook lookup via a select chain (fp32), gather-free."""
+    out = jnp.full(idx.shape, NF4_CODEBOOK[0], jnp.float32)
+    for i in range(1, 16):
+        out = jnp.where(idx == i, jnp.float32(NF4_CODEBOOK[i]), out)
+    return out
+
+
+def _pack_nf4(idx: jnp.ndarray) -> jnp.ndarray:
+    """Pack nibble codes 2-per-byte along the last dim (pad code 7 = 0.0)."""
+    c = idx.shape[-1]
+    if c % 2:
+        pad = [(0, 0)] * (idx.ndim - 1) + [(0, 1)]
+        idx = jnp.pad(idx, pad, constant_values=7)
+    lo = idx[..., 0::2]
+    hi = idx[..., 1::2]
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def unpack_nf4(q: jnp.ndarray, c: int) -> jnp.ndarray:
+    """Inverse of ``_pack_nf4``: uint8 codes -> nibble indices, cropped
+    to the true last-dim width ``c``."""
+    lo = q & jnp.uint8(0xF)
+    hi = (q >> 4) & jnp.uint8(0xF)
+    inter = jnp.stack([lo, hi], axis=-1).reshape(q.shape[:-1] +
+                                                 (2 * q.shape[-1],))
+    return inter[..., :c]
+
+
+def quantize_leaf(x: jnp.ndarray, fmt: str) -> dict:
+    """Quantize one eligible leaf to ``{"q", "s", "t"}``."""
+    if fmt not in QUANT_FORMATS:
+        raise ValueError(f"unknown quant format {fmt!r}; "
+                         f"expected one of {QUANT_FORMATS}")
+    tile_r = _tile_rows(x.ndim)
+    x32 = x.astype(jnp.float32)
+    absmax = jnp.maximum(_tile_absmax(x32, tile_r), jnp.float32(_TINY))
+    if fmt == "int8":
+        scale = absmax / 127.0
+        inv = expand_scales(scale, x.shape, tile_r)
+        q = jnp.clip(jnp.round(x32 / inv), -127, 127).astype(jnp.int8)
+    else:
+        scale = absmax
+        y = x32 / expand_scales(scale, x.shape, tile_r)
+        q = _pack_nf4(_nf4_encode(y))
+    return {"q": q, "s": scale, "t": _template(x)}
+
+
+def dequantize_leaf(leaf: dict) -> jnp.ndarray:
+    """Reconstruct a leaf in its original shape and dtype."""
+    q, s, t = leaf["q"], leaf["s"], leaf["t"]
+    shape = quant_shape(leaf)
+    tile_r = _tile_rows(len(shape))
+    se = expand_scales(s, shape, tile_r)
+    if q.dtype == jnp.int8:
+        w = q.astype(jnp.float32) * se
+    else:
+        w = nf4_decode(unpack_nf4(q, shape[-1])) * se
+    return w.astype(t.dtype)
+
+
+def quantize_tree(tree: PyTree, fmt: str) -> PyTree:
+    """Quantize every eligible leaf; ineligible leaves pass through."""
+    return jax.tree.map(
+        lambda x: quantize_leaf(x, fmt) if quantizable(x) else x, tree)
+
+
+def dequantize_tree(tree: PyTree) -> PyTree:
+    """Inverse of ``quantize_tree`` (identity on unquantized leaves)."""
+    return jax.tree.map(
+        lambda x: dequantize_leaf(x) if is_quantized(x) else x, tree,
+        is_leaf=is_quantized)
+
+
+def quant_leaf_bytes(shape: tuple[int, ...], itemsize: int, fmt: str,
+                     floating: bool = True) -> int:
+    """Resident bytes of one leaf after quantization — pure-shape math
+    shared with ``core.memory_model`` (no arrays needed)."""
+    n = math.prod(shape) if shape else 1
+    if not floating or len(shape) < 2:
+        return n * itemsize
+    r, c = shape[-2], shape[-1]
+    lead = math.prod(shape[:-2]) if len(shape) > 2 else 1
+    tile_r = _tile_rows(len(shape))
+    scales = lead * math.ceil(r / tile_r) * math.ceil(c / _LANE) * 4
+    if fmt == "int8":
+        codes = n
+    elif fmt == "nf4":
+        codes = lead * r * math.ceil(c / 2)
+    else:
+        raise ValueError(f"unknown quant format {fmt!r}; "
+                         f"expected one of {QUANT_FORMATS}")
+    return codes + scales
+
+
+def tree_logical_size(tree: PyTree) -> int:
+    """Element count of the ORIGINAL tree (codec records count as the leaf
+    they encode, not their codes+scales) — what param-count accounting like
+    ``peak_trainable_params`` must report regardless of residency format."""
+    total = 0
+    for leaf in jax.tree.leaves(tree, is_leaf=is_quantized):
+        if is_quantized(leaf):
+            total += math.prod(quant_shape(leaf))
+        else:
+            total += int(leaf.size)
+    return total
+
+
+def quant_bytes(tree: PyTree) -> int:
+    """Actual resident bytes of a (possibly partially) quantized tree."""
+    total = 0
+    for leaf in jax.tree.leaves(tree, is_leaf=is_quantized):
+        if is_quantized(leaf):
+            total += sum(int(a.size) * a.dtype.itemsize
+                         for a in (leaf["q"], leaf["s"], leaf["t"]))
+        else:
+            total += int(leaf.size) * leaf.dtype.itemsize
+    return total

@@ -7,6 +7,16 @@ apply uniformly across every model family's param tree:
   size shards over ``model`` (vocab for embeddings, d_ff for MLPs, heads
   for attention); everything else replicates.  Stacked-layer leading dims
   (n_layers) are never eligible because they are scanned, not partitioned.
+- quantized codec records (``dist.quant``: ``{"q": codes, "s": scales,
+  "t": template}``) need no special casing anywhere in this module: every
+  rule is a structural ``jax.tree.map``, so it descends into the record
+  dict and places codes/scales/template leaf-wise — int8 codes keep the
+  payload's shape and shard exactly like it, packed NF4 codes and the
+  per-tile scale arrays shard where their own dims divide and replicate
+  otherwise.  Scale trees therefore always travel WITH their payloads
+  under one spec tree, and the donation-safety rule below (identical
+  in/out specs per donated position) holds for quantized arguments by the
+  same construction.
 - batches: leading (batch) dim over the data axes (``pod`` folds into data).
 - decode caches: batch-like dim over data, then one feature dim over model.
 

@@ -19,10 +19,12 @@ def _adagrad_kernel(p_ref, g_ref, a_ref, lr_ref, po_ref, ao_ref, *,
                     eps, weight_decay):
     p32 = p_ref[...].astype(jnp.float32)
     g32 = g_ref[...].astype(jnp.float32) + weight_decay * p32
-    a = a_ref[...] + jnp.square(g32)
+    # accumulator dequantizes (astype) from its resident dtype in VMEM —
+    # identity for fp32, fused bf16-moment path under quantized residency
+    a = a_ref[...].astype(jnp.float32) + jnp.square(g32)
     step = lr_ref[0] * g32 / (jnp.sqrt(a) + eps)
     po_ref[...] = (p32 - step).astype(po_ref.dtype)
-    ao_ref[...] = a
+    ao_ref[...] = a.astype(ao_ref.dtype)
 
 
 def fused_adagrad_pallas(p, g, accum, *, lr, eps=1e-10, weight_decay=0.0,
@@ -35,9 +37,9 @@ def fused_adagrad_pallas(p, g, accum, *, lr, eps=1e-10, weight_decay=0.0,
                                weight_decay=weight_decay)
     po, ao = elementwise_update_call(
         kernel,
-        [p, g, accum.astype(jnp.float32)],
+        [p, g, accum],
         [lr],
-        [dtype, jnp.float32],
+        [dtype, accum.dtype],
         n=p.size, block=block, interpret=interpret,
         donate=((0, 0), (2, 1)))
     return po.reshape(shape), ao.reshape(shape)

@@ -19,9 +19,11 @@ def _sgdm_kernel(p_ref, g_ref, mu_ref, lr_ref, po_ref, muo_ref, *,
                  momentum, weight_decay):
     p32 = p_ref[...].astype(jnp.float32)
     g32 = g_ref[...].astype(jnp.float32) + weight_decay * p32
-    mu = momentum * mu_ref[...] + g32
+    # momentum dequantizes (astype) from its resident dtype in VMEM —
+    # identity for fp32, fused bf16-moment path under quantized residency
+    mu = momentum * mu_ref[...].astype(jnp.float32) + g32
     po_ref[...] = (p32 - lr_ref[0] * mu).astype(po_ref.dtype)
-    muo_ref[...] = mu
+    muo_ref[...] = mu.astype(muo_ref.dtype)
 
 
 def fused_sgdm_pallas(p, g, mu, *, lr, momentum=0.9, weight_decay=0.0,
@@ -34,9 +36,9 @@ def fused_sgdm_pallas(p, g, mu, *, lr, momentum=0.9, weight_decay=0.0,
                                weight_decay=weight_decay)
     po, muo = elementwise_update_call(
         kernel,
-        [p, g, mu.astype(jnp.float32)],
+        [p, g, mu],
         [lr],
-        [dtype, jnp.float32],
+        [dtype, mu.dtype],
         n=p.size, block=block, interpret=interpret,
         donate=((0, 0), (2, 1)))
     return po.reshape(shape), muo.reshape(shape)

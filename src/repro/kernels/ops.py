@@ -203,6 +203,14 @@ def flash_attention(q, k, v, causal: bool = True, block_q: int = 256,
                                   block_k=block_k, interpret=INTERPRET)
 
 
+@jax.jit
+def dequant_matmul(x, leaf):
+    """``x @ dequantize(leaf)`` with the int8/NF4 decode fused into the
+    matmul block — no materialized fp32 weight (kernels/fused_dequant_matmul)."""
+    from repro.kernels.fused_dequant_matmul import fused_dequant_matmul
+    return fused_dequant_matmul(x, leaf, interpret=INTERPRET)
+
+
 @partial(jax.jit, static_argnames=("chunk",))
 def ssm_scan(x, a_log, b, c, chunk: int = 128):
     from repro.kernels.ssm_scan import ssm_scan_pallas

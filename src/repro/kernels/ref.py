@@ -71,6 +71,16 @@ def fused_adagrad_ref(p, g, a, *, lr, eps, weight_decay):
     return (p32 - step).astype(p.dtype), a_
 
 
+def dequant_matmul_ref(x, leaf):
+    """Reference-dequant matmul: materialize the fp32 weight with the
+    codec's own ``dequantize_leaf``, then one jnp.dot — the allclose/
+    bit-compare target for ``fused_dequant_matmul``."""
+    from repro.dist.quant import dequantize_leaf
+    w = dequantize_leaf(leaf).astype(jnp.float32)
+    return jnp.dot(x.astype(jnp.float32), w,
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+
+
 def ssm_scan_ref(x, a, b, c):
     """Sequential gated linear scan per head.
 

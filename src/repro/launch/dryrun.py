@@ -154,7 +154,7 @@ def _abstract_params(cfg: ArchConfig, dtype=jnp.bfloat16):
 def lower_train_cell(cfg: ArchConfig, shape: ShapeConfig, mesh,
                      strategy: str = "hift", fused_update: bool = False,
                      crosspod_pods: int = 0, stream_window: int = 1 << 20,
-                     stream_depth: int = 2):
+                     stream_depth: int = 2, quant: str = None):
     """Build + lower + compile the train step of ``strategy`` for a cell.
 
     Lowering needs abstract shapes and explicit shardings, so the cell step
@@ -167,10 +167,15 @@ def lower_train_cell(cfg: ArchConfig, shape: ShapeConfig, mesh,
     if strategy not in ("hift", "fpft", "fpft_streamed", "lomo", "adalomo"):
         raise ValueError("dry-run lowers hift|fpft|fpft_streamed|lomo|"
                          f"adalomo cells, got {strategy!r}")
+    if quant is not None and strategy != "hift":
+        raise ValueError("--quant lowers the grouped quantized-residency "
+                         "cell (QuantConfig realizes it for hift/lisa); it "
+                         f"does not apply to {strategy!r}")
     fpft = strategy == "fpft"
     model = get_family(cfg)
     params_s = _abstract_params(cfg)
-    opt = make_optimizer("adamw", use_pallas_fused=fused_update)
+    okw = {"moment_dtype": "bfloat16"} if quant else {}
+    opt = make_optimizer("adamw", use_pallas_fused=fused_update, **okw)
     batch_s = input_specs(cfg, shape)
     pshard = param_shardings(params_s, mesh)
     bshard = batch_shardings(batch_s, mesh)
@@ -298,7 +303,18 @@ def lower_train_cell(cfg: ArchConfig, shape: ShapeConfig, mesh,
 
         n_micro = max(cfg.grad_accum, 1)
 
+        if quant:
+            from repro.dist.quant import dequantize_tree, quantize_tree
+
         def step(active, frozen, bundle, batch, lr):
+            from repro.common.pytree import tree_cast
+            if quant:
+                # quantized residency (QuantConfig): codes dequantize on
+                # entry; grads are taken against the bf16 image of the
+                # bundle's fp32 master, never through the codes
+                frozen = dequantize_tree(frozen)
+                active = tree_cast(bundle["master"], jnp.bfloat16)
+
             def loss_of(a, mb):
                 full = merge_params(a, frozen, group)
                 return model.loss_fn(cfg, full, mb, cut=cut,
@@ -325,16 +341,24 @@ def lower_train_cell(cfg: ArchConfig, shape: ShapeConfig, mesh,
                 grads = jax.tree.map(lambda g: g / n_micro, g_sum)
                 loss = l_sum / n_micro
             # Mixed^Hi: fp32 master lives in the bundle, bf16 copy resident
-            from repro.common.pytree import tree_cast
             new_master, new_state = opt.update(grads, bundle["opt"],
                                                bundle["master"], lr)
             new_active = tree_cast(new_master, jnp.bfloat16)
+            if quant:
+                new_active = quantize_tree(new_active, quant)
             return new_active, {"opt": new_state, "master": new_master}, loss
 
         active_s, frozen_s = jax.eval_shape(partial(split_params, group=group),
                                             params_s)
         master_s = jax.tree.map(
             lambda x: jax.ShapeDtypeStruct(x.shape, jnp.float32), active_s)
+        if quant:
+            # resident tree codec-encoded (active AND frozen halves); the
+            # structural sharding rules descend into the q/s/t records
+            active_s = jax.eval_shape(lambda t: quantize_tree(t, quant),
+                                      active_s)
+            frozen_s = jax.eval_shape(lambda t: quantize_tree(t, quant),
+                                      frozen_s)
         bundle_s = {"opt": jax.eval_shape(opt.init, master_s),
                     "master": master_s}
         ashard = param_shardings(active_s, mesh)
@@ -349,6 +373,16 @@ def lower_train_cell(cfg: ArchConfig, shape: ShapeConfig, mesh,
             for x in jax.tree.leaves(bundle_s))
         groups_meta = {"mode": "hift", "k": len(groups), "group": group.label(),
                        "cut": cut, "bundle_bytes": int(bundle_bytes)}
+        if quant:
+            resident_b = sum(
+                math.prod(x.shape or (1,)) * jnp.dtype(x.dtype).itemsize
+                for x in jax.tree.leaves((active_s, frozen_s)))
+            plain_b = sum(
+                math.prod(x.shape or (1,)) * 2   # the bf16 resident it beats
+                for x in jax.tree.leaves(params_s))
+            groups_meta.update(quant=quant,
+                               quant_resident_bytes=int(resident_b),
+                               plain_resident_bytes=int(plain_b))
     return lowered, groups_meta
 
 
@@ -425,7 +459,7 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool = False,
              strategy: str = "hift", save: bool = True,
              fused_update: bool = False, pipeline_depth: int = 1,
              paged: bool = False, crosspod_pods: int = 0,
-             stream_window: int = 1 << 20) -> dict:
+             stream_window: int = 1 << 20, quant: str = None) -> dict:
     cfg = get_config(arch_id)
     shape = SHAPES[shape_name]
     ok, why = cell_supported(cfg, shape)
@@ -447,7 +481,8 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool = False,
                                              crosspod_pods=crosspod_pods,
                                              stream_window=stream_window,
                                              stream_depth=max(pipeline_depth,
-                                                              2))
+                                                              2),
+                                             quant=quant)
             meta["fused_update"] = fused_update
             meta["pipeline_depth"] = pipeline_depth
         else:
@@ -580,6 +615,12 @@ def main():
                     help="fpft_streamed chunk size in bytes; the priced "
                          "device window is max(pipeline-depth, 2) chunks of "
                          "fp32 m+v moment slices")
+    ap.add_argument("--quant", default=None, choices=["int8", "nf4"],
+                    help="lower the hift cell with the resident tree "
+                         "codec-encoded (dist.quant) and bf16 AdamW "
+                         "moments — the QuantConfig(frozen=..., "
+                         "moments='bf16') residency; the cell's "
+                         "argument/per-device bytes shrink accordingly")
     ap.add_argument("--fpft", action="store_true",
                     help="deprecated alias for --strategy fpft")
     args = ap.parse_args()
@@ -602,7 +643,7 @@ def main():
                         fused_update=args.fused_update,
                         pipeline_depth=args.pipeline_depth, paged=args.paged,
                         crosspod_pods=args.crosspod_pods,
-                        stream_window=args.stream_window)
+                        stream_window=args.stream_window, quant=args.quant)
                for a, s, mp in cells]
     n_ok = sum(r["status"] == "ok" for r in results)
     n_skip = sum(r["status"] == "skipped" for r in results)

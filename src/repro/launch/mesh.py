@@ -33,8 +33,11 @@ def init_distributed(coordinator: str, num_processes: int, process_id: int,
     Must run before anything touches the jax backend:
 
     - ``local_device_count`` fabricates that many host CPU devices per
-      process via ``XLA_FLAGS`` (the multi-host CI harness runs 2 processes
-      x 2 local devices = one 4-device global mesh on a laptop).
+      process via ``XLA_FLAGS`` (the multi-host CI harness runs 4 processes
+      x 1 local device = one 4-device global mesh on a laptop; one device
+      per process keeps each node's gloo collective issue order equal to
+      program order — multiple local devices race their rank threads on
+      the shared communicator and can cross messages).
     - On CPU backends the default cross-process collectives implementation
       refuses multi-process computations outright; this selects the gloo
       transport (the same one ``jax[cpu]`` ships for exactly this purpose).

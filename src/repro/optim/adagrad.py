@@ -8,14 +8,18 @@ from repro.optim.base import Optimizer, clip_by_global_norm
 
 
 def adagrad(eps: float = 1e-10, weight_decay: float = 0.0,
-            grad_clip: float = 0.0, use_pallas_fused: bool = False) -> Optimizer:
+            grad_clip: float = 0.0, use_pallas_fused: bool = False,
+            moment_dtype=None) -> Optimizer:
     """``use_pallas_fused`` routes the elementwise update through the fused
     Pallas kernel (kernels/fused_adagrad.py): one VMEM pass over
-    param+accum, bit-identical to the unfused math (test-enforced)."""
+    param+accum, bit-identical to the unfused math (test-enforced).
+    ``moment_dtype`` sets the RESIDENT accumulator dtype (fp32 default;
+    bf16 under quantized residency) — fp32 compute, re-round on store."""
+    moment_dtype = jnp.dtype(moment_dtype or jnp.float32)
 
     def init(params):
         return {
-            "accum": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "accum": jax.tree.map(lambda p: jnp.zeros(p.shape, moment_dtype), params),
             "count": jnp.zeros((), jnp.int32),
         }
 
@@ -32,9 +36,10 @@ def adagrad(eps: float = 1e-10, weight_decay: float = 0.0,
 
         def upd(p, g, a):
             g32 = g.astype(jnp.float32) + weight_decay * p.astype(jnp.float32)
-            a_ = a + jnp.square(g32)
+            a_ = a.astype(jnp.float32) + jnp.square(g32)
             step = lr * g32 / (jnp.sqrt(a_) + eps)
-            return (p.astype(jnp.float32) - step).astype(p.dtype), a_
+            return ((p.astype(jnp.float32) - step).astype(p.dtype),
+                    a_.astype(moment_dtype))
 
         flat_p, treedef = jax.tree.flatten(params)
         flat_g = treedef.flatten_up_to(grads)
@@ -44,5 +49,6 @@ def adagrad(eps: float = 1e-10, weight_decay: float = 0.0,
                 {"accum": treedef.unflatten([o[1] for o in out]),
                  "count": state["count"] + 1})
 
-    return Optimizer("adagrad", init, update, state_bytes_per_param=4.0,
+    return Optimizer("adagrad", init, update,
+                     state_bytes_per_param=float(moment_dtype.itemsize),
                      stream_safe=not grad_clip and not use_pallas_fused)

@@ -9,17 +9,24 @@ from repro.optim.base import Optimizer, clip_by_global_norm
 
 def adamw(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
           weight_decay: float = 0.0, grad_clip: float = 0.0,
-          use_pallas_fused: bool = False) -> Optimizer:
+          use_pallas_fused: bool = False, moment_dtype=None) -> Optimizer:
     """AdamW with bias correction.  State = {m, v, count}: 2 moments per
     param (paper: zeta_2 = 2*zeta_1).
 
     ``use_pallas_fused`` routes the elementwise update through the fused
     Pallas kernel (kernels/fused_adamw.py) — one VMEM pass over param+m+v,
     the TPU analogue of LOMO's fused update.
+
+    ``moment_dtype`` is the RESIDENT dtype of m/v (default fp32).  Under
+    quantized residency (``QuantConfig(moments="bf16")``) moments live as
+    bf16 — half the state bytes and wire bytes — while every update still
+    computes in fp32 and re-rounds on store; the fused kernel performs the
+    same dequant-into-update in VMEM, bit-identically.
     """
+    moment_dtype = jnp.dtype(moment_dtype or jnp.float32)
 
     def init(params):
-        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
         return {
             "m": jax.tree.map(zeros, params),
             "v": jax.tree.map(zeros, params),
@@ -42,12 +49,13 @@ def adamw(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
 
         def upd(p, g, m, v):
             g32 = g.astype(jnp.float32)
-            m_ = b1 * m + (1.0 - b1) * g32
-            v_ = b2 * v + (1.0 - b2) * jnp.square(g32)
+            m_ = b1 * m.astype(jnp.float32) + (1.0 - b1) * g32
+            v_ = b2 * v.astype(jnp.float32) + (1.0 - b2) * jnp.square(g32)
             mhat = m_ / c1
             vhat = v_ / c2
             step = lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32))
-            return (p.astype(jnp.float32) - step).astype(p.dtype), m_, v_
+            return ((p.astype(jnp.float32) - step).astype(p.dtype),
+                    m_.astype(moment_dtype), v_.astype(moment_dtype))
 
         flat_p, treedef = jax.tree.flatten(params)
         flat_g = treedef.flatten_up_to(grads)
@@ -61,5 +69,6 @@ def adamw(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
 
     # elementwise whenever the global-norm clip (which couples every leaf)
     # is off — the contract the chunk-streamed fpft_streamed strategy needs
-    return Optimizer("adamw", init, update, state_bytes_per_param=8.0,
+    return Optimizer("adamw", init, update,
+                     state_bytes_per_param=2.0 * moment_dtype.itemsize,
                      stream_safe=not grad_clip and not use_pallas_fused)

@@ -29,16 +29,20 @@ def sgd(weight_decay: float = 0.0, grad_clip: float = 0.0) -> Optimizer:
 
 
 def sgdm(momentum: float = 0.9, weight_decay: float = 0.0,
-         grad_clip: float = 0.0, use_pallas_fused: bool = False) -> Optimizer:
+         grad_clip: float = 0.0, use_pallas_fused: bool = False,
+         moment_dtype=None) -> Optimizer:
     """SGD with heavy-ball momentum: one moment per param (zeta_2 = zeta_1).
 
     ``use_pallas_fused`` routes the elementwise update through the fused
     Pallas kernel (kernels/fused_sgdm.py): one VMEM pass over param+mu,
-    bit-identical to the unfused math (test-enforced)."""
+    bit-identical to the unfused math (test-enforced).  ``moment_dtype``
+    sets the RESIDENT momentum dtype (fp32 default; bf16 under quantized
+    residency) — updates always compute fp32 and re-round on store."""
+    moment_dtype = jnp.dtype(moment_dtype or jnp.float32)
 
     def init(params):
         return {
-            "mu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "mu": jax.tree.map(lambda p: jnp.zeros(p.shape, moment_dtype), params),
             "count": jnp.zeros((), jnp.int32),
         }
 
@@ -54,8 +58,9 @@ def sgdm(momentum: float = 0.9, weight_decay: float = 0.0,
 
         def upd(p, g, mu):
             g32 = g.astype(jnp.float32) + weight_decay * p.astype(jnp.float32)
-            mu_ = momentum * mu + g32
-            return (p.astype(jnp.float32) - lr * mu_).astype(p.dtype), mu_
+            mu_ = momentum * mu.astype(jnp.float32) + g32
+            return ((p.astype(jnp.float32) - lr * mu_).astype(p.dtype),
+                    mu_.astype(moment_dtype))
 
         flat_p, treedef = jax.tree.flatten(params)
         flat_g = treedef.flatten_up_to(grads)
@@ -65,5 +70,6 @@ def sgdm(momentum: float = 0.9, weight_decay: float = 0.0,
                 {"mu": treedef.unflatten([o[1] for o in out]),
                  "count": state["count"] + 1})
 
-    return Optimizer("sgdm", init, update, state_bytes_per_param=4.0,
+    return Optimizer("sgdm", init, update,
+                     state_bytes_per_param=float(moment_dtype.itemsize),
                      stream_safe=not grad_clip and not use_pallas_fused)

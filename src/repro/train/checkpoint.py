@@ -76,12 +76,44 @@ def _decode_tree(blob: bytes) -> PyTree:
     return unflatten_from_paths(flat)
 
 
+def _fetch(x):
+    """Host copy of one leaf, safe under multi-process meshes.
+
+    ``np.asarray`` demands every shard be addressable by THIS process, which
+    fails for globally-sharded ``jax.Array``s (each process holds only its
+    slice of the mesh).  Those gather across processes first — the allgather
+    is a collective, so every process of the job must call :func:`save` (and
+    gets the full host value back, keeping the encoded bytes identical
+    everywhere)."""
+    if isinstance(x, jax.Array) and not x.is_fully_addressable:
+        from jax.experimental import multihost_utils
+        x = multihost_utils.process_allgather(x, tiled=True)
+    return np.asarray(x)
+
+
 def save(ckpt_dir: str | Path, step: int, state: PyTree,
          keep: int = 3, async_write: bool = False) -> Optional[threading.Thread]:
     """Write checkpoint for ``step``.  async_write=True returns the writer
-    thread (join before exit); the state is snapshotted to host first."""
+    thread (join before exit); the state is snapshotted to host first.
+
+    Multi-process jobs: every process must call this (the host snapshot
+    gathers non-addressable shards collectively), process 0 alone writes
+    the files, and the synchronous path ends in a global barrier so no
+    process can race ahead and restore a half-written step.  The async
+    path skips the barrier (the writer thread outlives the call); callers
+    that need the cross-process guarantee use ``async_write=False``."""
     ckpt_dir = Path(ckpt_dir)
-    host_state = jax.tree.map(lambda x: np.asarray(x), state)
+    # quiesce in-flight computation first: multi-process gathers issue one
+    # collective per non-addressable leaf, and any still-running training
+    # collectives interleaving with them would cross gloo messages between
+    # processes (single-process: a plain device sync, harmless)
+    jax.block_until_ready(state)
+    host_state = jax.tree.map(_fetch, state)
+    multi = jax.process_count() > 1
+
+    def _barrier():
+        from jax.experimental import multihost_utils
+        multihost_utils.sync_global_devices(f"checkpoint_save_{step}")
 
     def _write():
         tmp = ckpt_dir / f".tmp_step_{step}_{time.time_ns()}"
@@ -97,11 +129,19 @@ def save(ckpt_dir: str | Path, step: int, state: PyTree,
         tmp.rename(final)
         _gc(ckpt_dir, keep)
 
+    if multi and jax.process_index() != 0:
+        # this process already contributed its shards to the gathers above;
+        # meet the writer at the barrier instead of duplicating the files
+        if not async_write:
+            _barrier()
+        return None
     if async_write:
         t = threading.Thread(target=_write, daemon=True)
         t.start()
         return t
     _write()
+    if multi:
+        _barrier()
     return None
 
 

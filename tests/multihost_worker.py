@@ -88,6 +88,30 @@ def main():
                     schedule=LRSchedule(1e-2),
                     cross_pod=CrossPodConfig(pods=2, compress=True)),
         batch, 3)
+
+    if len(sys.argv) > 5:
+        # checkpoint phase: state leaves shard over the GLOBAL mesh, so no
+        # process can np.asarray them directly — save_state must gather
+        # collectively, write from process 0 only, and barrier; every
+        # process then restores the identical bytes and resumes in lockstep
+        from repro.train import checkpoint as ckpt
+        ckpt_dir = sys.argv[5]
+        r = make_runner(cfg, "fpft", params=params, mesh=mesh,
+                        optimizer="adamw", schedule=LRSchedule(1e-3))
+        pre = run_steps(r, batch, 2)
+        sharded = [not l.is_fully_addressable
+                   for l in jax.tree.leaves(r.state.params)
+                   if isinstance(l, jax.Array)]
+        ckpt.save_state(ckpt_dir, 2, r.state)
+        restored = ckpt.restore_state(ckpt_dir, 2)
+        r2 = make_runner(cfg, "fpft", params=params, mesh=mesh,
+                         optimizer="adamw", schedule=LRSchedule(1e-3))
+        r2.load_state_dict(restored.to_tree())
+        out["ckpt"] = {
+            "pre": pre,
+            "gathered_leaves": int(sum(sharded)),
+            "resumed": run_steps(r, batch, 1) + run_steps(r2, batch, 1),
+        }
     print(json.dumps(out))
 
 

@@ -39,9 +39,15 @@ def max_leaf_diff(a, b):
 
 
 def run_steps(runner, batch, n):
+    # block on the FULL state each step, not just the loss scalar: under a
+    # multi-process mesh the param/opt-state all-reduces keep running after
+    # the loss is fetched, and letting them overlap the next dispatch lets
+    # the processes issue gloo collectives in different orders (crossed
+    # messages abort with "op.preamble.length <= op.nbytes")
     losses = []
     for _ in range(n):
         losses.append(float(runner.train_step(batch)))
+        jax.block_until_ready(runner.state)
     return losses
 
 

@@ -1,15 +1,23 @@
-"""Multi-process data parallelism: 2 coordinated CPU processes form ONE
-mesh (jax.distributed + fabricated local devices) and the strategies'
-sharded steps must match the single-process path.
+"""Multi-process data parallelism: 4 coordinated CPU processes form ONE
+mesh (jax.distributed + one fabricated local device each) and the
+strategies' sharded steps must match the single-process path.
 
 The coordinated job runs in subprocesses (tests/multihost_worker.py): the
 XLA device-count flag and the gloo CPU-collectives transport must be set
-before jax initializes its backend, and the two workers must be separate
-OS processes to exercise real cross-process collectives.  Both workers
-print the replicated losses; this parent asserts (a) the processes agree
+before jax initializes its backend, and the workers must be separate OS
+processes to exercise real cross-process collectives.  Every worker prints
+the replicated losses; this parent asserts (a) the processes agree
 bit-for-bit — they executed one SPMD program — and (b) the losses match an
 in-process single-device reference within the same tolerances the
 single-process sharding tests use.
+
+ONE local device per process is load-bearing, not a simplification: with
+two fabricated devices per process the node's two local rank threads race
+to issue each program's collectives on the shared gloo communicator, so
+the per-node slot order diverges between processes and gloo aborts with
+``op.preamble.length <= op.nbytes`` (crossed messages on a TCP pair) a
+large fraction of runs.  One device per process pins every rank's issue
+order to program order, which is identical across the SPMD job.
 
 Environments whose jax build cannot run multi-process CPU collectives make
 the worker print an ``unsupported`` marker, which SKIPS these tests
@@ -35,8 +43,8 @@ from repro.models import transformer as T
 pytestmark = pytest.mark.timeout(600)
 
 _REPO = Path(__file__).resolve().parent.parent
-_NPROC = 2
-_LOCAL_DEVICES = 2
+_NPROC = 4
+_LOCAL_DEVICES = 1
 
 
 def _free_port() -> int:
@@ -46,16 +54,18 @@ def _free_port() -> int:
 
 
 @pytest.fixture(scope="module")
-def worker_outs():
+def worker_outs(tmp_path_factory):
     env = dict(os.environ)
     env["PYTHONPATH"] = str(_REPO / "src") + os.pathsep + \
         env.get("PYTHONPATH", "")
     env.pop("XLA_FLAGS", None)  # workers fabricate their own device count
     port = _free_port()
+    ckpt_dir = tmp_path_factory.mktemp("multihost_ckpt")
     procs = [
         subprocess.Popen(
             [sys.executable, str(_REPO / "tests" / "multihost_worker.py"),
-             str(port), str(_NPROC), str(i), str(_LOCAL_DEVICES)],
+             str(port), str(_NPROC), str(i), str(_LOCAL_DEVICES),
+             str(ckpt_dir)],
             stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True,
             env=env)
         for i in range(_NPROC)
@@ -115,9 +125,10 @@ def test_two_processes_form_one_mesh(worker_outs):
 
 def test_processes_agree_bitwise(worker_outs):
     # one SPMD program: every process computes the same replicated losses
-    a, b = worker_outs
+    first, *rest = worker_outs
     for key in ("hift_sgd", "fpft_adamw", "adalomo", "fpft_crosspod"):
-        assert a[key] == b[key], key
+        for o in rest:
+            assert first[key] == o[key], key
 
 
 @pytest.mark.parametrize("key,tol", [
@@ -133,3 +144,19 @@ def test_multiprocess_matches_single_process(worker_outs, reference, key,
     assert len(got) == len(want) == 3
     dloss = max(abs(g - w) for g, w in zip(got, want))
     assert dloss < tol, (key, got, want)
+
+
+def test_checkpoint_gathers_global_shards(worker_outs):
+    """save_state on a multi-process mesh: non-addressable shards gather
+    collectively (np.asarray alone would raise), process 0 writes, the
+    barrier keeps restore from racing the write — and a fresh runner resumes
+    the restored state in lockstep on every process."""
+    for o in worker_outs:
+        c = o["ckpt"]
+        # the fix is only exercised if some leaves really were global
+        assert c["gathered_leaves"] > 0, c
+        # restored runner continues bit-identically to the uninterrupted one
+        assert c["resumed"][0] == c["resumed"][1], c
+    first, *rest = worker_outs
+    for o in rest:
+        assert first["ckpt"] == o["ckpt"]

@@ -1,0 +1,133 @@
+"""Deterministic quant smoke: fused dequant kernels, codec basics, wiring.
+
+The hypothesis battery (tests/test_quant_properties.py) hammers the codec's
+per-tile bounds over adversarial inputs; this file is the always-on tier-1
+coverage that does not need hypothesis installed:
+
+  - ``fused_dequant_matmul`` is BIT-equal to the reference-dequant path
+    (materialize with ``dequantize_leaf``, then ``jnp.dot``) under jit —
+    the same contract the fused optimizer kernels pin in test_kernels.py;
+  - the bf16 ``moment_dtype`` fused updates equal their unfused factories
+    bit-for-bit (the dequant-into-update path);
+  - NF4 reconstructs exact codebook multiples exactly; int8 round-trip
+    error stays within half a tile step;
+  - the ``QuantConfig`` rejection matrix raises typed, actionable errors.
+
+The end-to-end residency run (quantized == unquantized losses over 30
+steps, checkpoint round-trip with scales) is the conformance battery's
+``test_quantized_residency_lockstep``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny_dense_cfg
+from repro.core import QuantConfig, make_runner
+from repro.dist.quant import (NF4_CODEBOOK, dequantize_leaf, expand_scales,
+                              is_quantized, quantize_leaf)
+from repro.kernels.ops import dequant_matmul
+from repro.kernels.ref import dequant_matmul_ref
+from repro.optim import make_optimizer
+
+
+def _weight(shape, seed=0, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32) \
+        .astype(dtype)
+
+
+# ------------------------------------------------- fused dequant matmul
+
+@pytest.mark.parametrize("fmt", ["int8", "nf4"])
+@pytest.mark.parametrize("m,k,n", [
+    (16, 256, 128),   # lane-aligned
+    (8, 96, 200),     # ragged N: partial lane tile in the scale grid
+    (4, 64, 384),     # multi-block N
+])
+def test_fused_dequant_matmul_bit_equal_under_jit(fmt, m, k, n):
+    leaf = quantize_leaf(_weight((k, n)), fmt)
+    x = _weight((m, k), seed=1)
+    got = jax.jit(dequant_matmul)(x, leaf)
+    want = jax.jit(dequant_matmul_ref)(x, leaf)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_fused_dequant_matmul_bf16_activations():
+    leaf = quantize_leaf(_weight((64, 256), dtype=jnp.bfloat16), "nf4")
+    x = _weight((8, 64), seed=2, dtype=jnp.bfloat16)
+    got = jax.jit(dequant_matmul)(x, leaf)
+    want = jax.jit(dequant_matmul_ref)(x, leaf)
+    assert got.dtype == want.dtype
+    np.testing.assert_array_equal(
+        np.asarray(got, np.float32), np.asarray(want, np.float32))
+
+
+# ------------------------------------------- dequant-into-update kernels
+
+@pytest.mark.parametrize("name", ["adamw", "sgdm", "adagrad"])
+def test_bf16_moment_fused_update_bit_equal_to_unfused(name):
+    """With bf16-resident moments the fused kernel loads them in bf16 and
+    upcasts in VMEM; the result must still match the unfused factory's
+    compute-fp32/store-bf16 contract bit-for-bit."""
+    params = {"w": _weight((24, 130)), "b": _weight((3, 8, 140), seed=3)}
+    grads = jax.tree.map(lambda p: p * 0.01, params)
+    ref = make_optimizer(name, moment_dtype="bfloat16")
+    fused = make_optimizer(name, use_pallas_fused=True,
+                           moment_dtype="bfloat16")
+    p_r, s_r = params, ref.init(params)
+    p_f, s_f = params, fused.init(params)
+    for step in range(3):
+        lr = jnp.float32(1e-2)
+        p_r, s_r = jax.jit(ref.update)(grads, s_r, p_r, lr)
+        p_f, s_f = jax.jit(fused.update)(grads, s_f, p_f, lr)
+    for a, b in zip(jax.tree.leaves((p_r, s_r)), jax.tree.leaves((p_f, s_f))):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+# ------------------------------------------------------------ codec smoke
+
+def test_int8_roundtrip_within_half_tile_step():
+    for shape in [(7, 200), (2, 9, 140), (1, 1), (8, 128)]:
+        x = _weight(shape, seed=5)
+        rec = quantize_leaf(x, "int8")
+        if not is_quantized(rec):      # 1-d/scalar leaves pass through
+            continue
+        se = np.asarray(expand_scales(rec["s"], x.shape,
+                                      8 if x.ndim >= 3 else 1))
+        err = np.abs(np.asarray(dequantize_leaf(rec)) - np.asarray(x))
+        assert np.all(err <= se / 2 + 1e-5 * se), shape
+
+
+def test_nf4_codebook_multiples_roundtrip_exactly():
+    book = np.asarray(NF4_CODEBOOK, np.float32)
+    idx = np.arange(16 * 8).reshape(8, 16) % 16
+    idx[:, 0] = 0                      # codebook[0] == -1.0 pins absmax
+    x = jnp.asarray(book[idx] * np.float32(0.5))
+    rec = quantize_leaf(x, "nf4")
+    np.testing.assert_array_equal(np.asarray(rec["s"]),
+                                  np.full(rec["s"].shape, 0.5, np.float32))
+    np.testing.assert_array_equal(np.asarray(dequantize_leaf(rec)),
+                                  np.asarray(x))
+
+
+# ------------------------------------------------------- rejection matrix
+
+def test_quant_config_rejections():
+    with pytest.raises(ValueError, match="frozen"):
+        QuantConfig(frozen="int4")
+    with pytest.raises(ValueError, match="moments"):
+        QuantConfig(moments="fp8")
+    with pytest.raises(ValueError):
+        QuantConfig()                  # both knobs off: caller bug
+
+    cfg = tiny_dense_cfg()
+    with pytest.raises(ValueError, match="does not support"):
+        make_runner(cfg, "mezo", quant=QuantConfig(frozen="int8"))
+    with pytest.raises(ValueError, match="moment-carrying"):
+        make_runner(cfg, "hift", optimizer="sgd",
+                    quant=QuantConfig(moments="bf16"))
+    with pytest.raises(ValueError, match="by name"):
+        make_runner(cfg, "hift", optimizer=make_optimizer("adamw"),
+                    quant=QuantConfig(moments="bf16"))

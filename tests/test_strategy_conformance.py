@@ -138,6 +138,57 @@ def test_compressed_reduce_lockstep(strategy, tmp_path):
 
 
 @pytest.mark.parametrize("strategy", ALL_STRATEGIES)
+def test_quantized_residency_lockstep(strategy, tmp_path):
+    """Quantized resident state is part of the strategy contract: any entry
+    declaring ``supports_quant_frozen`` must train with the resident tree
+    codec-encoded (``QuantConfig``), stay within a pinned loss tolerance of
+    the unquantized run over 30 steps, and checkpoint/resume bit-identically
+    WITH the codec records (scales travel in the checkpoint) — keyed on the
+    declaration, zero per-strategy special-casing."""
+    from repro.core import QuantConfig
+    from repro.dist.quant import is_quantized
+
+    if not registry.get_strategy_cls(strategy).supports_quant_frozen:
+        # "unsupported:" prefix is machine-read by tools/strategy_matrix.py
+        pytest.skip(f"unsupported: {strategy} does not declare "
+                    "supports_quant_frozen")
+    cfg = tiny_dense_cfg(ce_chunk=0)
+    q = QuantConfig(frozen="int8", moments="bf16")
+    rq = make_runner(cfg, strategy, seed=0, schedule=LRSchedule(base_lr=3e-3),
+                     quant=q)
+    rp = make_runner(cfg, strategy, seed=0, schedule=LRSchedule(base_lr=3e-3))
+    assert any(is_quantized(l) for l in
+               jax.tree.leaves(rq.state.params, is_leaf=is_quantized)), \
+        "resident tree carries no codec records"
+    mid = 15
+    for step in range(mid):
+        batch = make_batch(cfg, batch=2, seq=16, seed=step)
+        lq, lp = float(rq.train_step(batch)), float(rp.train_step(batch))
+        # pinned: int8 residency tracks the exact run (smoke: max |dq-dp|
+        # ~6e-3 over 10 steps); a codec bug shows up as divergence here
+        assert abs(lq - lp) < 0.08, (step, lq, lp)
+    ckpt.save_state(tmp_path, mid, rq.state)
+    restored = ckpt.restore_state(tmp_path, mid)
+    _assert_same(_snapshot(rq.state), _snapshot(restored),
+                 err=f"{strategy}: quant restore @ ")
+    assert any(is_quantized(l) for l in
+               jax.tree.leaves(restored.params, is_leaf=is_quantized)), \
+        "checkpoint dropped the codec records (scales lost)"
+    r2 = make_runner(cfg, strategy, seed=7, schedule=LRSchedule(base_lr=3e-3),
+                     quant=q)
+    r2.load_state_dict(restored.to_tree())
+    assert r2.step_count == mid
+    for step in range(mid, 30):
+        batch = make_batch(cfg, batch=2, seq=16, seed=step)
+        l1, l2 = float(rq.train_step(batch)), float(r2.train_step(batch))
+        lp = float(rp.train_step(batch))
+        np.testing.assert_allclose(l1, l2, atol=1e-6)
+        assert abs(l1 - lp) < 0.08, (step, l1, lp)
+    _assert_same(_snapshot(rq.state), _snapshot(r2.state),
+                 err=f"{strategy}: quant lockstep @ ")
+
+
+@pytest.mark.parametrize("strategy", ALL_STRATEGIES)
 def test_metrics_contract(strategy):
     cfg = tiny_dense_cfg(ce_chunk=0)
     r = _runner(strategy, cfg)

@@ -166,13 +166,19 @@ def test_bundle_pipeline_rejects_depth_below_two():
 
 def test_lomo_adalomo_reject_cross_pod_with_exact_message():
     """The fused-backward strategies have no full gradient tree to reduce;
-    the rejection message is part of the API (docs/sharding.md cites it)."""
+    the rejection message is part of the API (docs/sharding.md cites it)
+    and must say WHY and point at the strategies that do support it."""
     cfg = tiny_dense_cfg(ce_chunk=0)
     for name in ("lomo", "adalomo"):
         with pytest.raises(ValueError) as ei:
             _runner(name, cfg, cross_pod=CrossPodConfig(pods=2))
-        assert str(ei.value) == \
-            f"strategy {name!r} does not support cross_pod"
+        assert str(ei.value) == (
+            f"strategy {name!r} does not support cross_pod: "
+            "the fused backward consumes each piece's gradient inside the "
+            "reverse scan, so no whole-gradient tree ever exists for the "
+            "cross-pod reduce to compress (a per-piece reduce hook is a "
+            "ROADMAP item); use fpft/fpft_streamed — or the grouped "
+            "hift/lisa — for compressed cross-pod data parallelism")
 
 
 def test_host_put_warns_once_then_falls_back(monkeypatch):
